@@ -1,0 +1,25 @@
+"""Insert the generated dry-run/roofline/perf tables into EXPERIMENTS.md.
+
+Run:  PYTHONPATH=src python -m benchmarks.assemble_experiments
+"""
+
+import os
+
+from benchmarks.report import dryrun_table, perf_section, roofline_table
+
+DOC = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def main():
+    with open(DOC) as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_table())
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table())
+    text = text.replace("<!-- PERF_TABLES -->", perf_section())
+    with open(DOC, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md assembled")
+
+
+if __name__ == "__main__":
+    main()

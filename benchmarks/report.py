@@ -1,0 +1,170 @@
+"""Render EXPERIMENTS.md tables from results/dryrun and results/roofline.
+
+Run:  PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+ARCH_ORDER = [
+    "xlstm-350m",
+    "starcoder2-3b",
+    "yi-34b",
+    "granite-8b",
+    "command-r-plus-104b",
+    "whisper-medium",
+    "deepseek-v2-lite-16b",
+    "kimi-k2-1t-a32b",
+    "internvl2-26b",
+    "recurrentgemma-2b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(sub):
+    out = {}
+    for fn in glob.glob(os.path.join(RESULTS, sub, "*.json")):
+        with open(fn) as f:
+            d = json.load(f)
+        out[(d["arch"], d["shape"], d.get("mesh", "16x16"))] = d
+    return out
+
+
+def _skip_reason(arch, shape):
+    from repro.configs import get_config
+    from repro.launch.dryrun import cell_is_skipped
+    from repro.models.config import SHAPES
+
+    return cell_is_skipped(get_config(arch), SHAPES[shape])
+
+
+def _fmt_bytes(n):
+    if n is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if n < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PiB"
+
+
+def dryrun_table() -> str:
+    data = _load("dryrun")
+    lines = [
+        "| arch | shape | mesh | status | per-chip args | temps | compile |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                d = data.get((arch, shape, mesh))
+                if d is None:
+                    reason = _skip_reason(arch, shape)
+                    tag = (
+                        f"skip: {reason}" if reason else "MISSING"
+                    )
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | {tag} | - | - | - |"
+                    )
+                    continue
+                if d["status"] != "ok":
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | {d['status']}: "
+                        f"{d.get('reason','')} | - | - | - |"
+                    )
+                    continue
+                mem = d["memory"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | "
+                    f"{_fmt_bytes(mem['argument_bytes'])} | "
+                    f"{_fmt_bytes(mem['temp_bytes'])} | "
+                    f"{d['compile_s']}s |"
+                )
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    data = _load("roofline")
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPS | useful | bound step |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = data.get((arch, shape, "16x16"))
+            if d is None:
+                reason = _skip_reason(arch, shape)
+                tag = f"skip: {reason}" if reason else "MISSING"
+                lines.append(f"| {arch} | {shape} | {tag} | | | | | | |")
+                continue
+            if d["status"] != "ok":
+                lines.append(
+                    f"| {arch} | {shape} | {d['status']}:"
+                    f"{d.get('reason','')[:40]} | | | | | | |"
+                )
+                continue
+            ro = d["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {ro['compute_s']*1e3:.1f}ms | "
+                f"{ro['memory_s']*1e3:.1f}ms | "
+                f"{ro['collective_s']*1e3:.1f}ms | {ro['dominant']} | "
+                f"{d['model_flops']:.2e} | "
+                f"{d['useful_ratio']:.2f} | {max(ro['compute_s'], ro['memory_s'], ro['collective_s'])*1e3:.1f}ms |"
+            )
+    return "\n".join(lines)
+
+
+def perf_section() -> str:
+    files = {
+        "yi34b_prefill32k": "§Perf-1 yi-34b × prefill_32k (worst fraction)",
+        "kimi_train4k": "§Perf-2 kimi-k2-1t × train_4k (most collective-bound)",
+        "grad_exchange": "§Perf-3 gradient exchange (paper-technique cell)",
+    }
+    out = []
+    for stem, title in files.items():
+        path = os.path.join(RESULTS, "perf", f"{stem}.json")
+        if not os.path.exists(path):
+            out.append(f"### {title}\n\n(missing)")
+            continue
+        with open(path) as f:
+            rows = json.load(f)
+        lines = [
+            f"### {title}",
+            "",
+            "| variant | compute | memory | collective | bound | Δbound |",
+            "|---|---|---|---|---|---|",
+        ]
+        base_bound = None
+        for r in rows:
+            ro = r["roofline"]
+            bound = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+            if base_bound is None or r["variant"].startswith(
+                ("baseline", "multipod-baseline")
+            ):
+                base_bound = bound
+            lines.append(
+                f"| {r['variant']} | {ro['compute_s']*1e3:.1f}ms | "
+                f"{ro['memory_s']*1e3:.1f}ms | {ro['collective_s']*1e3:.1f}ms "
+                f"| {bound*1e3:.1f}ms | {base_bound/bound:.2f}× |"
+            )
+        out.append("\n".join(lines))
+    return "\n\n".join(out)
+
+
+def main():
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table (single-pod 16x16)\n")
+    print(roofline_table())
+    print("\n## Perf experiments\n")
+    print(perf_section())
+
+
+if __name__ == "__main__":
+    main()

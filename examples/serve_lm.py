@@ -1,0 +1,82 @@
+"""Serving example: prefill + batched decode with KV cache.
+
+Loads a small dense LM (random weights — the point is the serving data
+path), prefills a batch of prompts, then decodes tokens autoregressively.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--tokens 32]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.registry import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = (
+        get_config("granite-8b")
+        .with_(
+            n_layers=4,
+            d_model=512,
+            n_heads=8,
+            n_kv_heads=2,
+            d_ff=1536,
+            vocab=32768,
+            param_dtype="float32",
+            compute_dtype="float32",
+            remat=False,
+        )
+    )
+    model = get_model(cfg)
+    params, _ = model.init_params(cfg, jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
+    )
+    max_len = args.prompt_len + args.tokens
+
+    t0 = time.perf_counter()
+    logits, cache = model.prefill(cfg, params, prompts, max_len=max_len)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+    print(
+        f"prefill: batch={args.batch} len={args.prompt_len} "
+        f"in {t_prefill*1e3:.1f} ms"
+    )
+
+    decode = jax.jit(
+        lambda p, c, t, o: model.decode_step(cfg, p, c, t, o)
+    )
+    tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tokens]
+    t0 = time.perf_counter()
+    for i in range(args.tokens - 1):
+        logits, cache = decode(
+            params, cache, tokens, jnp.int32(args.prompt_len + i)
+        )
+        tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tokens)
+    jax.block_until_ready(out[-1])
+    dt = time.perf_counter() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(
+        f"decoded {args.tokens} tokens/seq in {dt*1e3:.1f} ms "
+        f"({args.tokens*args.batch/dt:.1f} tok/s total)"
+    )
+    print("sample token ids:", np.asarray(gen[0])[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Packed bit-plane arrays and the bulk bitwise op algebra.
+
+This is the data model of the TPU adaptation of Flash-Cosmos: a "page" (one
+NAND wordline's worth of data in the paper) becomes one packed ``uint32``
+bit-plane row.  A stack of operands is a ``(num_operands, num_words)`` array,
+the layout analogue of co-locating operands in one NAND block so that a single
+MWS sensing covers all of them (paper §6.3: placement matters; here it means
+the operand axis is contiguous and a single BlockSpec block covers all rows).
+
+Bit ``i`` of the logical vector lives at word ``i // 32``, bit ``i % 32``
+(LSB-first), matching ``numpy.packbits(..., bitorder='little')`` on a uint32
+view.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+WORD_DTYPE = jnp.uint32
+_FULL = np.uint32(0xFFFFFFFF)
+
+
+class BitOp(enum.Enum):
+    """Bulk bitwise ops supported by Flash-Cosmos (paper §4.1, §6.1)."""
+
+    AND = "and"
+    OR = "or"
+    XOR = "xor"
+    NAND = "nand"
+    NOR = "nor"
+    XNOR = "xnor"
+
+    @property
+    def base(self) -> "BitOp":
+        """The non-inverted reduction this op is built on (inverse read)."""
+        return {
+            BitOp.AND: BitOp.AND,
+            BitOp.NAND: BitOp.AND,
+            BitOp.OR: BitOp.OR,
+            BitOp.NOR: BitOp.OR,
+            BitOp.XOR: BitOp.XOR,
+            BitOp.XNOR: BitOp.XOR,
+        }[self]
+
+    @property
+    def inverted(self) -> bool:
+        """Whether the result is complemented (paper: inverse-read mode)."""
+        return self in (BitOp.NAND, BitOp.NOR, BitOp.XNOR)
+
+    @property
+    def identity_word(self) -> np.uint32:
+        """Reduction identity for the *base* op, as a packed word."""
+        return _FULL if self.base is BitOp.AND else np.uint32(0)
+
+
+def num_words(num_bits: int) -> int:
+    return -(-num_bits // WORD_BITS)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a {0,1} array of shape (..., L) into (..., ceil(L/32)) uint32.
+
+    Padding bits (when L % 32 != 0) are packed as 0; callers that reduce with
+    AND must mask with :func:`valid_mask` (the engine does this).
+    """
+    L = bits.shape[-1]
+    W = num_words(L)
+    pad = W * WORD_BITS - L
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1
+        )
+    b = bits.astype(WORD_DTYPE).reshape(bits.shape[:-1] + (W, WORD_BITS))
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    return jnp.sum(b << shifts, axis=-1, dtype=WORD_DTYPE)
+
+
+def unpack_bits(words: jax.Array, num_bits: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`: (..., W) uint32 -> (..., num_bits) uint8."""
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    bits = (words[..., None] >> shifts) & WORD_DTYPE(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD_BITS,))
+    return bits[..., :num_bits].astype(jnp.uint8)
+
+
+def valid_mask(num_bits: int) -> np.ndarray:
+    """Per-word mask with 1s at valid bit positions for a length-num_bits vector."""
+    W = num_words(num_bits)
+    mask = np.full((W,), _FULL, dtype=np.uint32)
+    rem = num_bits % WORD_BITS
+    if rem:
+        mask[-1] = np.uint32((1 << rem) - 1)
+    return mask
+
+
+@dataclass(frozen=True)
+class BitVector:
+    """A logical bit vector backed by packed words.
+
+    ``words``: (..., W) uint32; ``length``: number of valid bits.
+    """
+
+    words: jax.Array
+    length: int
+
+    @classmethod
+    def from_bits(cls, bits: jax.Array) -> "BitVector":
+        return cls(pack_bits(bits), bits.shape[-1])
+
+    def to_bits(self) -> jax.Array:
+        return unpack_bits(self.words, self.length)
+
+    @property
+    def num_words(self) -> int:
+        return self.words.shape[-1]
+
+    def masked(self) -> "BitVector":
+        """Zero the padding bits (needed before popcount / after NOT-like ops)."""
+        mask = jnp.asarray(valid_mask(self.length))
+        return BitVector(self.words & mask, self.length)
+
+
+def reduce_words(stack: jax.Array, op: BitOp) -> jax.Array:
+    """Pure-jnp word-level reduction over the operand axis (axis 0).
+
+    This is the *semantic* definition of an MWS operation; the Pallas kernel in
+    ``repro.kernels.mws`` must match it bit-exactly (see tests).
+    """
+    base = op.base
+    if base is BitOp.AND:
+        out = jnp.bitwise_and.reduce(stack, axis=0)
+    elif base is BitOp.OR:
+        out = jnp.bitwise_or.reduce(stack, axis=0)
+    else:
+        out = jnp.bitwise_xor.reduce(stack, axis=0)
+    if op.inverted:
+        out = ~out
+    return out

@@ -1,0 +1,173 @@
+"""Flash-Cosmos execution engine.
+
+Executes a :class:`CommandPlan` with bit-exact latch semantics (paper
+Figs. 3/4/6 and §6.2):
+
+* MWS sensing: per target block, the NAND string conducts only if **all**
+  selected cells conduct ⇒ AND of the block's selected wordlines; blocks
+  share bitlines ⇒ OR across blocks; inverse read complements.
+* S-latch: ``S = raw`` when initialized, else ``S & raw`` (ParaBit-AND).
+* move-S-to-C: ``C = S`` when C initialized, else ``C | S`` (ParaBit-OR).
+* XOR command: ``C = S ^ C``.
+* Spill: ESP-program a latch into a scratch page.
+* Transfer: DMA out, optional controller-side inversion.
+
+The engine stores *logical* page data; physical cell data is complemented
+for pages placed ``inverted`` (De Morgan storage).  Reads of non-ESP pages
+can inject modelled bit errors (``repro.core.reliability``); ESP pages are
+error-free — the paper's headline reliability result.
+
+On TPU, plans whose sensing ops reduce the same operand stack collapse into
+the fused MWS kernel (``repro.kernels.mws``); `execute` uses it for every
+sensing command.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitops import BitOp
+from repro.core.commands import (
+    CommandPlan,
+    ESPCommand,
+    MWSCommand,
+    SpillCommand,
+    TransferCommand,
+    XORCommand,
+)
+from repro.core.expr import Expr, Node, Page
+from repro.core.placement import Layout
+from repro.core.planner import Planner
+from repro.core.reliability import (
+    CellMode,
+    ProgramConfig,
+    inject_bit_errors,
+    rber,
+)
+from repro.kernels.mws import mws_reduce
+
+
+@dataclass
+class FlashArray:
+    """A (single-plane) Flash-Cosmos array: layout + page store + planner."""
+
+    layout: Layout = field(default_factory=Layout)
+    store: dict[str, jax.Array] = field(default_factory=dict)  # physical
+    program_configs: dict[str, ProgramConfig] = field(default_factory=dict)
+    pec: dict[int, int] = field(default_factory=dict)  # block -> P/E cycles
+    interpret: bool = True
+
+    # -- host API (fc_write / fc_read, §6.3) -------------------------------
+    def fc_write(
+        self,
+        name: str,
+        words: jax.Array,
+        *,
+        inverted: bool | None = None,
+        block: int | None = None,
+        wordline: int | None = None,
+        esp: bool = True,
+    ) -> None:
+        """Program a page. ESP mode (default) guarantees error-free reads."""
+        if name in self.layout:
+            p = self.layout[name]
+            inverted = p.inverted if inverted is None else inverted
+        else:
+            inverted = bool(inverted)
+            if block is None:
+                (p,) = self.layout.place_colocated([name], inverted)
+            else:
+                p = self.layout.place(name, block, wordline or 0, inverted)
+        cfg = (
+            ProgramConfig(CellMode.SLC, randomized=False, tesp_ratio=2.0)
+            if esp
+            else ProgramConfig(CellMode.SLC, randomized=False, tesp_ratio=1.0)
+        )
+        self.program_configs[name] = cfg
+        physical = ~words if inverted else words
+        self.store[name] = physical
+        self.pec[p.block] = self.pec.get(p.block, 0) + 1
+
+    def fc_read(self, e: Expr) -> jax.Array:
+        """Plan + execute a bulk bitwise expression; returns logical words."""
+        plan = Planner(self.layout).compile(e)
+        return self.execute(plan)
+
+    # -- sensing ------------------------------------------------------------
+    def _page_by_location(self, block: int, wordline: int) -> str:
+        for name, p in self.layout.placements.items():
+            if p.block == block and p.wordline == wordline:
+                return name
+        raise KeyError(f"no page at block {block} wl {wordline}")
+
+    def _sense(self, cmd: MWSCommand, seed: int) -> jax.Array:
+        per_block = []
+        for t in cmd.targets:
+            names = [self._page_by_location(t.block, wl) for wl in t.wordlines]
+            stack = jnp.stack([self._physical_read(n, seed) for n in names])
+            per_block.append(
+                mws_reduce(stack, BitOp.AND, interpret=self.interpret)
+            )
+        raw = (
+            per_block[0]
+            if len(per_block) == 1
+            else mws_reduce(
+                jnp.stack(per_block), BitOp.OR, interpret=self.interpret
+            )
+        )
+        return ~raw if cmd.iscm.inverse_read else raw
+
+    def _physical_read(self, name: str, seed: int) -> jax.Array:
+        words = self.store[name]
+        cfg = self.program_configs.get(name)
+        if cfg is None or cfg.is_esp:
+            return words
+        p = self.layout[name]
+        r = rber(cfg, pec=self.pec.get(p.block, 0))
+        return inject_bit_errors(words, r, seed=seed ^ hash(name) & 0xFFFF)
+
+    # -- plan execution -------------------------------------------------------
+    def execute(self, plan: CommandPlan, seed: int = 0) -> jax.Array:
+        s = c = None
+        out = None
+        for i, cmd in enumerate(plan.commands):
+            if isinstance(cmd, MWSCommand):
+                raw = self._sense(cmd, seed + i)
+                s = raw if cmd.iscm.init_s_latch or s is None else s & raw
+                if cmd.iscm.init_c_latch:
+                    c = None  # M4 pulse wipes the cache latch (Fig. 6a)
+                if cmd.iscm.move_s_to_c:
+                    c = s if c is None else c | s
+            elif isinstance(cmd, XORCommand):
+                c = s ^ c
+            elif isinstance(cmd, SpillCommand):
+                # ESP-program the latch value as-is; when the sub-plan's
+                # logical result is the complement of the latch, the planner
+                # recorded that in the scratch page's layout.inverted flag.
+                value = s if cmd.source == "S" else c
+                self.store[cmd.page_name] = value
+                self.program_configs[cmd.page_name] = ProgramConfig(
+                    CellMode.SLC, randomized=False, tesp_ratio=2.0
+                )
+                self.pec[cmd.block] = self.pec.get(cmd.block, 0) + 1
+            elif isinstance(cmd, TransferCommand):
+                value = s if cmd.source == "S" else c
+                out = ~value if cmd.invert else value
+            elif isinstance(cmd, ESPCommand):
+                pass  # data writes flow through fc_write in this model
+        assert out is not None, "plan missing TransferCommand"
+        return out
+
+
+def eval_expr(e: Expr, logical: dict[str, jax.Array]) -> jax.Array:
+    """Direct (oracle) evaluation of an expression on logical page data."""
+    if isinstance(e, Page):
+        return logical[e.name]
+    assert isinstance(e, Node)
+    vals = jnp.stack([eval_expr(c, logical) for c in e.children])
+    from repro.core.bitops import reduce_words
+
+    return reduce_words(vals, e.op)

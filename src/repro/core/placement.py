@@ -1,0 +1,125 @@
+"""Physical placement of operand pages (paper §6.3 "Requirements").
+
+The paper's placement rules, encoded:
+
+* operands of an AND group should be **co-located in one block** (one
+  intra-block MWS covers all of them);
+* operands of an OR-heavy group should be stored **inverted and co-located**
+  (inverse-read intra-block MWS + De Morgan gives OR in one command);
+* OR across plain operands needs them in **different blocks** (inter-block
+  MWS, ≤ 4 blocks per command for the power budget).
+
+``Layout`` tracks name -> (block, wordline, inverted) and hands out scratch
+pages for planner spills.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.commands import WLS_PER_BLOCK
+from repro.core.expr import Expr, Node, Page, leaves
+from repro.core.bitops import BitOp
+
+
+@dataclass(frozen=True)
+class PagePlacement:
+    block: int
+    wordline: int
+    inverted: bool = False  # stored as complement (for De Morgan OR)
+
+
+@dataclass
+class Layout:
+    wls_per_block: int = WLS_PER_BLOCK
+    placements: dict[str, PagePlacement] = field(default_factory=dict)
+    _block_fill: dict[int, int] = field(default_factory=dict)
+    _next_block: int = 0
+    _scratch_count: int = 0
+
+    # -- explicit placement ------------------------------------------------
+    def place(
+        self, name: str, block: int, wordline: int, inverted: bool = False
+    ) -> PagePlacement:
+        if name in self.placements:
+            raise ValueError(f"page {name!r} already placed")
+        if not 0 <= wordline < self.wls_per_block:
+            raise ValueError("wordline out of range")
+        p = PagePlacement(block, wordline, inverted)
+        self.placements[name] = p
+        self._block_fill[block] = max(
+            self._block_fill.get(block, 0), wordline + 1
+        )
+        self._next_block = max(self._next_block, block + 1)
+        return p
+
+    # -- allocation helpers --------------------------------------------
+    def alloc_block(self) -> int:
+        b = self._next_block
+        self._next_block += 1
+        self._block_fill[b] = 0
+        return b
+
+    def place_colocated(
+        self, names: list[str], inverted: bool = False
+    ) -> list[PagePlacement]:
+        """Pack names into as few blocks as possible (AND / De-Morgan-OR)."""
+        out = []
+        block = self.alloc_block()
+        for name in names:
+            wl = self._block_fill[block]
+            if wl >= self.wls_per_block:
+                block = self.alloc_block()
+                wl = 0
+            out.append(self.place(name, block, wl, inverted))
+        return out
+
+    def place_spread(self, names: list[str]) -> list[PagePlacement]:
+        """One block per name (plain OR via inter-block MWS)."""
+        return [self.place(n, self.alloc_block(), 0, False) for n in names]
+
+    def alloc_scratch(self) -> tuple[str, int, int]:
+        """Scratch page for planner spills (ESP-programmed intermediates)."""
+        name = f"__scratch{self._scratch_count}"
+        self._scratch_count += 1
+        block = self.alloc_block()
+        self._block_fill[block] = 1
+        return name, block, 0
+
+    def __getitem__(self, name: str) -> PagePlacement:
+        return self.placements[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.placements
+
+
+def auto_layout(expr: Expr, layout: Layout | None = None) -> Layout:
+    """Derive a placement from an expression per the paper's §6.3 rules.
+
+    AND/NAND/XOR groups of leaves -> co-located plain; OR/NOR groups of
+    leaves -> co-located inverted; nested nodes recurse.  Pages already
+    placed (shared between subexpressions) are left where they are.
+    """
+    layout = layout if layout is not None else Layout()
+
+    def walk(e: Expr, ctx: BitOp) -> None:
+        if isinstance(e, Page):
+            if e.name not in layout:
+                if ctx.base is BitOp.OR:
+                    layout.place_colocated([e.name], inverted=True)
+                else:
+                    layout.place_colocated([e.name], inverted=False)
+            return
+        assert isinstance(e, Node)
+        leaf_children = [c for c in e.children if isinstance(c, Page)]
+        new = [c.name for c in leaf_children if c.name not in layout]
+        if e.op.base is BitOp.OR:
+            layout.place_colocated(new, inverted=True)
+        else:
+            layout.place_colocated(new, inverted=False)
+        for c in e.children:
+            if isinstance(c, Node):
+                walk(c, e.op)
+
+    walk(expr, expr.op if isinstance(expr, Node) else BitOp.AND)
+    return layout

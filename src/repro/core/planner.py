@@ -1,0 +1,353 @@
+"""Expression -> Flash-Cosmos command-plan compiler (paper §6.1–6.2, Fig. 16).
+
+Compilation model:
+
+* A **unit** is a subexpression computable by ONE MWS command given the
+  layout: a page read; an intra-block AND (plain pages, one block); a
+  De-Morgan OR (inverted pages, one block, inverse read); an inter-block
+  OR-of-string-ANDs (≤ 4 blocks, Eq. 1).
+* Outer **AND** chains units in the S-latch (first command inits S, the rest
+  accumulate — ParaBit-AND semantics).  Only the FIRST command of an S-chain
+  may use inverse read (§6.2 ordering rule); additional inverse units are
+  *spilled*: computed by their own chain and ESP-programmed into a scratch
+  page, then re-sensed as a plain operand.
+* Outer **OR** runs one command per unit, accumulating in the C-latch via
+  the move-S-to-C path (ParaBit-OR semantics); every command re-inits S, so
+  any number of inverse-read units is fine.  Plain intra-AND units in
+  distinct blocks are merged ≤ 4-per-command into inter-block MWS (Eq. 1).
+* Outer **XOR** senses one unit at a time and folds with the inter-latch
+  XOR command (§6.1).
+* NAND/NOR/XNOR: single-unit cases use inverse read directly; multi-command
+  chains apply the final complement during DMA (controller-side inverter —
+  no extra flash-array operation).
+
+Deeper nesting spills subexpression results to scratch pages.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.bitops import BitOp
+from repro.core.commands import (
+    MAX_INTER_BLOCKS,
+    ISCM,
+    BlockPBM,
+    CommandPlan,
+    MWSCommand,
+    SpillCommand,
+    TransferCommand,
+    XORCommand,
+)
+from repro.core.expr import Expr, Node, Page
+from repro.core.placement import Layout
+
+
+@dataclass(frozen=True)
+class Unit:
+    """One-MWS-command realization of a subexpression."""
+
+    targets: tuple[BlockPBM, ...]
+    inverse: bool
+
+
+def _merge_pbms(pbms: list[BlockPBM]) -> tuple[BlockPBM, ...]:
+    by_block: dict[int, int] = {}
+    for t in pbms:
+        by_block[t.block] = by_block.get(t.block, 0) | t.pbm
+    return tuple(BlockPBM(b, m) for b, m in sorted(by_block.items()))
+
+
+def _as_unit(e: Expr, layout: Layout) -> Unit | None:
+    """Try to realize ``e`` as a single MWS command; None if impossible."""
+    if isinstance(e, Page):
+        p = layout[e.name]
+        return Unit((BlockPBM(p.block, 1 << p.wordline),), p.inverted)
+
+    assert isinstance(e, Node)
+    kids = e.children
+    if len(kids) == 1 and e.op in (BitOp.NAND, BitOp.NOR):  # NOT
+        inner = _as_unit(kids[0], layout)
+        if inner is None:
+            return None
+        return Unit(inner.targets, not inner.inverse)
+
+    if not all(isinstance(k, Page) for k in kids):
+        # OR over intra-block AND groups (Eq. 1) — each child AND-unit must
+        # own a distinct block.
+        if e.op.base is BitOp.OR and all(
+            isinstance(k, (Node, Page)) for k in kids
+        ):
+            units = []
+            for k in kids:
+                u = _as_unit(k, layout)
+                if (
+                    u is None
+                    or u.inverse
+                    or len(u.targets) != 1
+                ):
+                    return None
+                units.append(u)
+            blocks = [u.targets[0].block for u in units]
+            if len(set(blocks)) != len(blocks):
+                return None
+            if len(blocks) > MAX_INTER_BLOCKS:
+                return None
+            return Unit(
+                _merge_pbms([u.targets[0] for u in units]),
+                e.op is BitOp.NOR,
+            )
+        return None
+
+    placements = [layout[k.name] for k in kids]
+    base = e.op.base
+
+    if base is BitOp.AND:
+        if any(p.inverted for p in placements):
+            return None  # AND wants plain storage
+        blocks = {p.block for p in placements}
+        if len(blocks) != 1:
+            return None  # AND across blocks needs an S-chain
+        pbm = 0
+        for p in placements:
+            pbm |= 1 << p.wordline
+        return Unit(
+            (BlockPBM(placements[0].block, pbm),), e.op is BitOp.NAND
+        )
+
+    if base is BitOp.OR:
+        if all(p.inverted for p in placements):
+            blocks = {p.block for p in placements}
+            if len(blocks) == 1:  # De Morgan: inverse read of AND of A̅_i
+                pbm = 0
+                for p in placements:
+                    pbm |= 1 << p.wordline
+                return Unit(
+                    (BlockPBM(placements[0].block, pbm),),
+                    e.op is BitOp.OR,  # inverse => OR; plain sense => NOR
+                )
+            return None
+        if all(not p.inverted for p in placements):
+            blocks = [p.block for p in placements]
+            if len(set(blocks)) == len(blocks) and len(blocks) <= MAX_INTER_BLOCKS:
+                return Unit(
+                    _merge_pbms(
+                        [BlockPBM(p.block, 1 << p.wordline) for p in placements]
+                    ),
+                    e.op is BitOp.NOR,
+                )
+        return None
+
+    return None  # XOR is never a single sensing
+
+
+class Planner:
+    def __init__(self, layout: Layout):
+        self.layout = layout
+
+    # -- public -----------------------------------------------------------
+    def compile(self, e: Expr) -> CommandPlan:
+        plan = CommandPlan()
+        self._compile_into(e, plan, top=True)
+        plan.commands.append(
+            TransferCommand(plan.result_source, plan.result_invert)
+        )
+        return plan
+
+    # -- internals ----------------------------------------------------------
+    def _spill(self, e: Expr, plan: CommandPlan) -> Page:
+        """Compute a subexpression with its own chain and ESP-program the
+        result into a scratch page; returns the scratch leaf."""
+        sub = CommandPlan()
+        self._compile_into(e, sub, top=False)
+        plan.commands.extend(sub.commands)
+        name, block, wl = self.layout.alloc_scratch()
+        self.layout.place(name, block, wl, inverted=sub.result_invert)
+        plan.commands.append(
+            SpillCommand(block, wl, name, source=sub.result_source)
+        )
+        return Page(name)
+
+    def _units_or_spill(
+        self, kids: tuple[Expr, ...], plan: CommandPlan
+    ) -> list[Unit]:
+        units = []
+        for k in kids:
+            u = _as_unit(k, self.layout)
+            if u is None:
+                leaf = self._spill(k, plan)
+                u = _as_unit(leaf, self.layout)
+                assert u is not None
+            units.append(u)
+        return units
+
+    def _compile_into(self, e: Expr, plan: CommandPlan, top: bool) -> None:
+        if isinstance(e, Page):
+            e = Node(BitOp.AND, (e,))
+        u = _as_unit(e, self.layout)
+        if u is not None:
+            plan.commands.append(
+                MWSCommand(ISCM(inverse_read=u.inverse), u.targets)
+            )
+            plan.result_source = "S"
+            plan.result_invert = False
+            return
+
+        base = e.op.base
+        if base is BitOp.AND:
+            self._compile_and_chain(e, plan)
+        elif base is BitOp.OR:
+            self._compile_or_chain(e, plan)
+        else:
+            self._compile_xor_chain(e, plan)
+
+    def _compile_and_chain(self, e: Node, plan: CommandPlan) -> None:
+        kids = list(e.children)
+        # AND of plain same-... pages spread across blocks: group by block.
+        grouped: list[Expr] = []
+        by_block: dict[int, list[Page]] = {}
+        for k in kids:
+            if isinstance(k, Page) and not self.layout[k.name].inverted:
+                by_block.setdefault(self.layout[k.name].block, []).append(k)
+            else:
+                grouped.append(k)
+        for block_pages in by_block.values():
+            grouped.append(
+                block_pages[0]
+                if len(block_pages) == 1
+                else Node(BitOp.AND, tuple(block_pages))
+            )
+        units = self._units_or_spill(tuple(grouped), plan)
+        inverse_units = [u for u in units if u.inverse]
+        plain_units = [u for u in units if not u.inverse]
+        # De Morgan merge (the Fig. 16 command-① pattern): AND of inverse
+        # units == ONE inverse-read inter-block MWS over the union of their
+        # targets — valid while blocks stay distinct and within the ≤4-block
+        # power budget; otherwise start a new chunk.
+        inv_cmds: list[tuple[BlockPBM, ...]] = []
+        bucket: list[BlockPBM] = []
+        blocks: set[int] = set()
+        for u in inverse_units:
+            tblocks = {t.block for t in u.targets}
+            if blocks & tblocks or len(blocks | tblocks) > MAX_INTER_BLOCKS:
+                inv_cmds.append(_merge_pbms(bucket))
+                bucket, blocks = [], set()
+            bucket.extend(u.targets)
+            blocks |= tblocks
+        if bucket:
+            inv_cmds.append(_merge_pbms(bucket))
+        # §6.2 ordering: the (single) inverse-read command must head the
+        # S-chain; further inverse chunks are spilled and re-sensed plain.
+        ordered = (
+            [Unit(inv_cmds[0], True)] if inv_cmds else []
+        ) + plain_units
+        for extra in inv_cmds[1:]:
+            plan.commands.append(MWSCommand(ISCM(inverse_read=True), extra))
+            name, block, wl = self.layout.alloc_scratch()
+            self.layout.place(name, block, wl)
+            plan.commands.append(SpillCommand(block, wl, name, source="S"))
+            ordered.append(_as_unit(Page(name), self.layout))
+        for i, u in enumerate(ordered):
+            plan.commands.append(
+                MWSCommand(
+                    ISCM(
+                        inverse_read=u.inverse,
+                        init_s_latch=(i == 0),
+                        init_c_latch=False,  # C-latch untouched by AND chains
+                    ),
+                    u.targets,
+                )
+            )
+        plan.result_source = "S"
+        plan.result_invert = e.op is BitOp.NAND
+
+    def _compile_or_chain(self, e: Node, plan: CommandPlan) -> None:
+        # Non-unit AND children can be inlined: run their S-chain and pulse
+        # move-S-to-C only on the LAST command (intermediate partial ANDs
+        # must not leak into the C-latch OR).  Everything else goes through
+        # the unit/spill path.
+        unit_kids: list[Expr] = []
+        inline_chains: list[Node] = []
+        for k in e.children:
+            if (
+                isinstance(k, Node)
+                and k.op is BitOp.AND
+                and _as_unit(k, self.layout) is None
+            ):
+                inline_chains.append(k)
+            else:
+                unit_kids.append(k)
+        units = self._units_or_spill(tuple(unit_kids), plan)
+        # Merge plain single-block units into inter-block commands (Eq. 1).
+        plain = [u for u in units if not u.inverse and len(u.targets) == 1]
+        others = [u for u in units if u.inverse or len(u.targets) > 1]
+        merged: list[Unit] = []
+        bucket: list[BlockPBM] = []
+        seen_blocks: set[int] = set()
+        for u in plain:
+            t = u.targets[0]
+            if t.block in seen_blocks or len(bucket) == MAX_INTER_BLOCKS:
+                merged.append(Unit(_merge_pbms(bucket), False))
+                bucket, seen_blocks = [], set()
+            bucket.append(t)
+            seen_blocks.add(t.block)
+        if bucket:
+            merged.append(Unit(_merge_pbms(bucket), False))
+        all_units = merged + others
+        first_c = True
+        for u in all_units:
+            plan.commands.append(
+                MWSCommand(
+                    ISCM(
+                        inverse_read=u.inverse,
+                        init_s_latch=True,
+                        init_c_latch=first_c,
+                        move_s_to_c=True,
+                    ),
+                    u.targets,
+                )
+            )
+            first_c = False
+        for chain in inline_chains:
+            sub = CommandPlan()
+            self._compile_and_chain(chain, sub)
+            assert not sub.result_invert  # op is AND (not NAND) by filter
+            cmds = [c for c in sub.commands if isinstance(c, MWSCommand)]
+            last = cmds[-1]
+            for c in sub.commands:
+                if c is last:
+                    plan.commands.append(
+                        MWSCommand(
+                            ISCM(
+                                inverse_read=last.iscm.inverse_read,
+                                init_s_latch=last.iscm.init_s_latch,
+                                init_c_latch=first_c,
+                                move_s_to_c=True,
+                            ),
+                            last.targets,
+                        )
+                    )
+                else:
+                    plan.commands.append(c)
+            first_c = False
+        plan.result_source = "C"
+        plan.result_invert = e.op is BitOp.NOR
+
+    def _compile_xor_chain(self, e: Node, plan: CommandPlan) -> None:
+        units = self._units_or_spill(e.children, plan)
+        for i, u in enumerate(units):
+            plan.commands.append(
+                MWSCommand(
+                    ISCM(
+                        inverse_read=u.inverse,
+                        init_s_latch=True,
+                        init_c_latch=(i == 0),
+                        move_s_to_c=(i == 0),
+                    ),
+                    u.targets,
+                )
+            )
+            if i > 0:
+                plan.commands.append(XORCommand())
+        plan.result_source = "C" if len(units) > 1 else "S"
+        plan.result_invert = e.op is BitOp.XNOR

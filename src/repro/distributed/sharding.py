@@ -1,0 +1,104 @@
+"""Logical-axis sharding rules resolved against the active mesh.
+
+Model code annotates params/activations with *logical* axes ("fsdp",
+"model", "data"); this module rewrites them to the physical mesh axes:
+
+* ``fsdp``  -> ("pod", "data") on the multi-pod mesh, ("data",) on a single
+  pod, dropped on meshes without a data axis (CPU smoke tests).
+* ``model`` -> "model" when present, else dropped.
+* ``data``  -> ("pod", "data") / ("data",) for activation batch dims.
+
+Dropping an axis = replication along it, so the same model code runs on a
+1-device CPU and a 512-chip two-pod mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LOGICAL_FSDP = "fsdp"
+LOGICAL_TP = "model"
+LOGICAL_DP = "data"
+
+_ACTIVE_MESH: list[Mesh] = []
+
+
+@contextlib.contextmanager
+def active_mesh(mesh: Mesh):
+    """Enter a mesh for both legacy (``with mesh:``) resolution and the
+    logical-axis ``constrain`` helper."""
+    _ACTIVE_MESH.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE_MESH.pop()
+
+
+def current_mesh() -> Mesh | None:
+    return _ACTIVE_MESH[-1] if _ACTIVE_MESH else None
+
+
+def _physical(entry, mesh_axes: tuple[str, ...]):
+    if entry is None:
+        return None
+    entries = entry if isinstance(entry, tuple) else (entry,)
+    out: list[str] = []
+    for e in entries:
+        if e in (LOGICAL_FSDP, LOGICAL_DP):
+            if "pod" in mesh_axes and "data" in mesh_axes:
+                out.extend(["pod", "data"])
+            elif "data" in mesh_axes:
+                out.append("data")
+        elif e == LOGICAL_TP:
+            if "model" in mesh_axes:
+                out.append("model")
+        elif e in mesh_axes:
+            out.append(e)
+    if not out:
+        return None
+    return tuple(out) if len(out) > 1 else out[0]
+
+
+def resolve_spec(spec: P, mesh: Mesh) -> P:
+    axes = tuple(mesh.axis_names)
+    return P(*[_physical(e, axes) for e in spec])
+
+
+def resolve_tree(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: resolve_spec(s, mesh),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def shardings_tree(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, mesh)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constrain(x: jax.Array, *entries) -> jax.Array:
+    """with_sharding_constraint with logical axes; no-op outside a mesh."""
+    mesh = current_mesh()
+    if mesh is None or len(mesh.devices.flatten()) == 1:
+        return x
+    spec = resolve_spec(P(*entries), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def stacked(spec_tree: Any) -> Any:
+    """Prepend an unsharded leading (layer-stack) dim to every spec."""
+    return jax.tree.map(
+        lambda s: P(None, *s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,4 @@
+from repro.kernels.mws.ops import mws_reduce, parabit_reduce
+from repro.kernels.mws.ref import mws_reduce_ref
+
+__all__ = ["mws_reduce", "parabit_reduce", "mws_reduce_ref"]

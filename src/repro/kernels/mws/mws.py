@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: one-shot multi-operand bitwise reduction (MWS analogue).
+
+Flash-Cosmos performs bitwise AND/OR of up to ~48 operands with a *single*
+sensing operation instead of one sensing per operand (ParaBit).  The TPU
+analogue: the serial pairwise baseline re-streams the running result through
+HBM for every operand (~``3*(N-1)*W`` bytes of traffic); this kernel streams
+every operand tile into VMEM exactly once and reduces it on the VPU with a
+static tree, writing the result once (``(N+1)*W`` bytes).
+
+Tiling (the "placement" analogue of the paper's same-block co-location):
+
+* operand axis = sublane axis, blocked at ``fan_in`` rows (the VMEM analogue
+  of the 48-wordline NAND-string limit).  When ``N > fan_in`` the grid walks
+  operand blocks *innermost* and accumulates into the output block — exactly
+  the paper's "accumulate multiple MWS results in the latches" (§6.1).
+* word axis = lane axis, blocked at ``block_words`` (multiple of 128).
+
+The inverse-read mode (NAND/NOR/XNOR) is a complement applied once, on the
+final operand block — the latch-init ordering rule of §6.2 falls out of this:
+an inverted read cannot be *followed* by further accumulation into the same
+output, which the command planner enforces.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitops import BitOp
+
+# VMEM budget reasoning (v5e: ~16 MiB usable VMEM/core): one input block of
+# (64, 2048) uint32 = 512 KiB + (1, 2048) out + double-buffering head-room.
+DEFAULT_FAN_IN = 64
+DEFAULT_BLOCK_WORDS = 2048
+
+
+def _tree_reduce(blk: jax.Array, base: BitOp) -> jax.Array:
+    """AND/OR/XOR reduce over axis 0 via a static binary tree (Mosaic-safe)."""
+    fn = {
+        BitOp.AND: jnp.bitwise_and,
+        BitOp.OR: jnp.bitwise_or,
+        BitOp.XOR: jnp.bitwise_xor,
+    }[base]
+    n = blk.shape[0]
+    while n > 1:
+        half = n // 2
+        lo = blk[:half]
+        hi = blk[half : 2 * half]
+        rest = blk[2 * half : n]
+        blk = fn(lo, hi)
+        if rest.shape[0]:
+            blk = jnp.concatenate([blk, rest], axis=0)
+        n = blk.shape[0]
+    return blk  # (1, BW)
+
+
+def _mws_kernel(x_ref, o_ref, *, op: BitOp, n_op_blocks: int):
+    i = pl.program_id(1)  # operand-block index (innermost => safe revisits)
+    part = _tree_reduce(x_ref[...], op.base)
+
+    fn = {
+        BitOp.AND: jnp.bitwise_and,
+        BitOp.OR: jnp.bitwise_or,
+        BitOp.XOR: jnp.bitwise_xor,
+    }[op.base]
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] = fn(o_ref[...], part)
+
+    if op.inverted:
+
+        @pl.when(i == n_op_blocks - 1)
+        def _invert():
+            o_ref[...] = ~o_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("op", "fan_in", "block_words", "interpret"),
+)
+def mws_reduce_pallas(
+    stack: jax.Array,
+    op: BitOp,
+    *,
+    fan_in: int = DEFAULT_FAN_IN,
+    block_words: int = DEFAULT_BLOCK_WORDS,
+    interpret: bool = True,
+) -> jax.Array:
+    """One-shot multi-operand bitwise reduce of a padded operand stack.
+
+    ``stack``: (N, W) packed words with N a multiple of ``fan_in`` and W a
+    multiple of ``block_words`` (use :mod:`repro.kernels.mws.ops` for the
+    padding/unpadding wrapper).  Returns (W,).
+    """
+    n, w = stack.shape
+    assert n % fan_in == 0 and w % block_words == 0, (n, w, fan_in, block_words)
+    n_op_blocks = n // fan_in
+    n_w_blocks = w // block_words
+
+    out = pl.pallas_call(
+        functools.partial(_mws_kernel, op=op, n_op_blocks=n_op_blocks),
+        grid=(n_w_blocks, n_op_blocks),
+        in_specs=[
+            pl.BlockSpec((fan_in, block_words), lambda j, i: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_words), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, w), stack.dtype),
+        interpret=interpret,
+    )(stack)
+    return out[0]

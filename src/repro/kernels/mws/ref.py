@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the MWS (one-shot multi-operand bitwise reduce) kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitops import BitOp
+
+
+def mws_reduce_ref(stack: jax.Array, op: BitOp) -> jax.Array:
+    """Reference semantics of a Multi-Wordline Sensing operation.
+
+    stack: (N, W) packed words (any unsigned/int dtype); returns (W,) of the
+    same dtype = op-reduction over the operand axis, complemented for the
+    inverse-read ops (NAND/NOR/XNOR).
+    """
+    base = op.base
+    if base is BitOp.AND:
+        out = jnp.bitwise_and.reduce(stack, axis=0)
+    elif base is BitOp.OR:
+        out = jnp.bitwise_or.reduce(stack, axis=0)
+    else:
+        out = jnp.bitwise_xor.reduce(stack, axis=0)
+    if op.inverted:
+        out = ~out
+    return out

@@ -1,0 +1,4 @@
+from repro.kernels.mws_count.ops import mws_count
+from repro.kernels.mws_count.ref import mws_count_ref
+
+__all__ = ["mws_count", "mws_count_ref"]

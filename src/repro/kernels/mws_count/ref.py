@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused MWS-reduce + popcount kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitops import BitOp
+from repro.kernels.mws.ref import mws_reduce_ref
+
+
+def mws_count_ref(stack: jax.Array, op: BitOp) -> jax.Array:
+    """Bit-count of the op-reduction over the operand axis: (N, W) -> ()."""
+    reduced = mws_reduce_ref(stack, op)
+    return jnp.sum(
+        jax.lax.population_count(reduced).astype(jnp.int32)
+    )

@@ -1,0 +1,4 @@
+from repro.kernels.popcount.ops import popcount
+from repro.kernels.popcount.ref import popcount_ref
+
+__all__ = ["popcount", "popcount_ref"]

@@ -1,0 +1,43 @@
+"""Public jit'd API for the popcount kernel (padding + shape handling)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.popcount.popcount import (
+    DEFAULT_BLOCK_ROWS,
+    DEFAULT_BLOCK_WORDS,
+    popcount_pallas,
+)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "block_words", "interpret")
+)
+def popcount(
+    words: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_words: int = DEFAULT_BLOCK_WORDS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Population count per row. (W,)->() or (R, W)->(R,); zero-pads freely
+    (padding words contribute 0 to the count)."""
+    squeeze = words.ndim == 1
+    if squeeze:
+        words = words[None]
+    r, w = words.shape
+    block_rows = min(block_rows, max(1, r))
+    rp = -(-r // block_rows) * block_rows
+    wp = -(-w // block_words) * block_words
+    padded = jnp.pad(words, ((0, rp - r), (0, wp - w)))
+    out = popcount_pallas(
+        padded,
+        block_rows=block_rows,
+        block_words=block_words,
+        interpret=interpret,
+    )[:r]
+    return out[0] if squeeze else out

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the popcount kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def popcount_ref(words: jax.Array) -> jax.Array:
+    """Per-row population count: (R, W) uint32 -> (R,) int32."""
+    return jnp.sum(
+        jax.lax.population_count(words).astype(jnp.int32), axis=-1
+    )

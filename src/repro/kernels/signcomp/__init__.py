@@ -1,0 +1,23 @@
+from repro.kernels.signcomp.ops import (
+    SignLayout,
+    compress_signs,
+    decompress_signs,
+    majority_vote,
+    sign_layout,
+)
+from repro.kernels.signcomp.ref import (
+    majority_ref,
+    pack_signs_ref,
+    unpack_signs_ref,
+)
+
+__all__ = [
+    "SignLayout",
+    "compress_signs",
+    "decompress_signs",
+    "majority_vote",
+    "sign_layout",
+    "majority_ref",
+    "pack_signs_ref",
+    "unpack_signs_ref",
+]

@@ -1,0 +1,90 @@
+"""Public jit'd API: flat-gradient sign compression round-trip.
+
+``compress(flat)``  -> packed (R, W) uint32 planes + static layout
+``decompress(words, layout)`` -> flat ±1 vector
+``majority(stacked)`` -> packed majority vote across K replicas
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.signcomp.signcomp import (
+    WORD_BITS,
+    majority_pallas,
+    pack_signs_pallas,
+    unpack_signs_pallas,
+)
+
+_LANES = 512  # words per packed row; rows of 32*512 = 16384 grad elements
+
+
+def _row_block(rows: int) -> int:
+    for br in (8, 4, 2, 1):
+        if rows % br == 0:
+            return br
+    return 1
+
+
+@dataclass(frozen=True)
+class SignLayout:
+    n: int  # original flat length
+    rows: int  # packed rows R
+    words: int  # words per row W
+
+
+def sign_layout(n: int, lanes: int = _LANES) -> SignLayout:
+    elems_per_row = WORD_BITS * lanes
+    padded = -(-n // elems_per_row) * elems_per_row
+    rows_unpacked = padded // lanes
+    return SignLayout(n=n, rows=rows_unpacked // WORD_BITS, words=lanes)
+
+
+@functools.partial(jax.jit, static_argnames=("lanes", "interpret"))
+def compress_signs(
+    flat: jax.Array, *, lanes: int = _LANES, interpret: bool = True
+) -> jax.Array:
+    """Flat float vector -> packed (R, lanes) uint32 sign planes (32× smaller).
+
+    Padding elements are compressed from 0.0 (sign bit 1) and ignored at
+    decompression time.
+    """
+    layout = sign_layout(flat.shape[0], lanes)
+    padded = jnp.pad(flat, (0, layout.rows * WORD_BITS * lanes - flat.shape[0]))
+    x = padded.reshape(layout.rows * WORD_BITS, lanes)
+    return pack_signs_pallas(
+        x,
+        block_rows=_row_block(layout.rows),
+        block_words=min(lanes, 512),
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dtype", "interpret"))
+def decompress_signs(
+    words: jax.Array, n: int, *, dtype=jnp.float32, interpret: bool = True
+) -> jax.Array:
+    """Packed (R, W) uint32 -> flat (n,) of ±1 in ``dtype``."""
+    signs = unpack_signs_pallas(
+        words,
+        dtype=dtype,
+        block_rows=_row_block(words.shape[0]),
+        block_words=min(words.shape[1], 512),
+        interpret=interpret,
+    )
+    return signs.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def majority_vote(stacks: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """(K, R, W) packed sign planes -> (R, W) packed majority."""
+    return majority_pallas(
+        stacks,
+        block_rows=_row_block(stacks.shape[1]),
+        block_words=min(stacks.shape[2], 512),
+        interpret=interpret,
+    )

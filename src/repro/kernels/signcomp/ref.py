@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the sign-compression kernels.
+
+Packing layout: bit ``b`` of ``words[r, w]`` is the sign (1 = non-negative)
+of ``x[32*r + b, w]`` — packing along the *sublane* axis, which is the
+TPU-friendly orientation (lane dimension untouched by the pack/unpack).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def pack_signs_ref(x: jax.Array) -> jax.Array:
+    """(32*R, W) float -> (R, W) uint32 of sign bits (1 = x >= 0)."""
+    m, w = x.shape
+    assert m % WORD_BITS == 0
+    bits = (x >= 0).astype(jnp.uint32).reshape(m // WORD_BITS, WORD_BITS, w)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :, None]
+    return jnp.sum(bits << shifts, axis=1, dtype=jnp.uint32)
+
+
+def unpack_signs_ref(words: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """(R, W) uint32 -> (32*R, W) of ±1 in ``dtype``."""
+    r, w = words.shape
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :, None]
+    bits = (words[:, None, :] >> shifts) & jnp.uint32(1)
+    signs = bits.astype(jnp.int32) * 2 - 1
+    return signs.reshape(r * WORD_BITS, w).astype(dtype)
+
+
+def majority_ref(stacks: jax.Array) -> jax.Array:
+    """(K, R, W) packed sign words -> (R, W) packed majority-vote words.
+
+    Ties (possible only for even K) vote positive: bit = (2*sum >= K).
+    """
+    k, r, w = stacks.shape
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    acc = jnp.zeros((r, w), jnp.uint32)
+    for b in range(WORD_BITS):
+        sb = jnp.sum((stacks >> shifts[b]) & jnp.uint32(1), axis=0)
+        maj = (2 * sb >= k).astype(jnp.uint32)
+        acc = acc | (maj << shifts[b])
+    return acc

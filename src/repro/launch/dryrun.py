@@ -1,0 +1,258 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for the 16×16
+single-pod mesh and the 2×16×16 multi-pod mesh, every train/prefill/decode
+step must lower and compile, and we record memory_analysis(),
+cost_analysis(), and the collective schedule (parsed from optimized HLO)
+into results/dryrun/*.json for the roofline tables.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    active_mesh,
+    resolve_tree,
+)
+from repro.launch.hlo_analysis import roofline_from_compiled  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import (  # noqa: E402
+    decode_input_specs,
+    prefill_input_specs,
+    train_input_specs,
+)
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig  # noqa: E402
+from repro.models.registry import get_model  # noqa: E402
+from repro.train.optimizer import (  # noqa: E402
+    OptimizerConfig,
+    init_opt_state,
+    opt_state_specs,
+)
+from repro.train.steps import (  # noqa: E402
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def cell_is_skipped(cfg: ArchConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "long_500k needs sub-quadratic attention (full-attention arch)"
+    return None
+
+
+def _drop_data_axis(spec_tree):
+    """B=1 shapes cannot shard the batch axis — drop data/fsdp entries."""
+
+    def fix(spec):
+        entries = []
+        for e in spec:
+            if e in ("data", "fsdp") or (
+                isinstance(e, tuple) and any(x in ("data", "fsdp") for x in e)
+            ):
+                entries.append(None)
+            else:
+                entries.append(e)
+        return P(*entries)
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Returns (step_fn, arg_shapes, in_shardings)."""
+    model = get_model(cfg)
+    # shapes via eval_shape (no allocation); the spec tree is data-independent
+    # so we capture it as a side value during the same trace.
+    spec_box = {}
+
+    def _init_and_capture():
+        p, s = model.init_params(cfg, jax.random.PRNGKey(0))
+        spec_box["specs"] = s
+        return p
+
+    params_shapes = jax.eval_shape(_init_and_capture)
+    param_specs = spec_box["specs"]
+
+    opt_cfg = OptimizerConfig(state_dtype=cfg.optimizer_dtype)
+
+    if shape.kind == "train":
+        batch_shapes, batch_specs = train_input_specs(cfg, shape)
+        opt_shapes = jax.eval_shape(
+            lambda: init_opt_state(params_shapes, opt_cfg)
+        )
+        opt_specs = opt_state_specs(param_specs)
+        step = make_train_step(cfg, opt_cfg)
+        args = (params_shapes, opt_shapes, batch_shapes)
+        specs = (param_specs, opt_specs, batch_specs)
+    elif shape.kind == "prefill":
+        batch_shapes, batch_specs = prefill_input_specs(cfg, shape)
+        max_len = shape.seq_len + cfg.num_patch_tokens
+        step = make_prefill_step(cfg, max_len)
+        args = (params_shapes, batch_shapes)
+        specs = (param_specs, batch_specs)
+    else:  # decode
+        (cache_shapes, tok, off), (cache_spec, tok_spec, off_spec) = (
+            decode_input_specs(cfg, shape)
+        )
+        step = make_decode_step(cfg)
+        args = (params_shapes, cache_shapes, tok, off)
+        specs = (param_specs, cache_spec, tok_spec, off_spec)
+
+    data_axis = mesh.shape.get("pod", 1) * mesh.shape["data"]
+    if shape.global_batch % data_axis != 0:
+        specs = _drop_data_axis(specs)
+
+    resolved = resolve_tree(specs, mesh)
+    in_shardings = _sanitized_shardings(args, resolved, mesh)
+    return step, args, in_shardings
+
+
+def _sanitized_shardings(args, resolved_specs, mesh):
+    """pjit boundary shardings must divide dims evenly (unlike in-body
+    constraints) — replicate any axis that doesn't divide (e.g. kv=8 heads
+    on a 16-way model axis, batch=1 on the data axis)."""
+
+    def fix(arg, spec):
+        entries = []
+        for i, e in enumerate(spec):
+            if e is None or i >= len(arg.shape):
+                entries.append(e)
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            entries.append(e if arg.shape[i] % size == 0 else None)
+        return NamedSharding(mesh, P(*entries))
+
+    flat_args, treedef = jax.tree.flatten(args)
+    flat_specs = treedef.flatten_up_to(resolved_specs)
+    return jax.tree.unflatten(
+        treedef, [fix(a, s) for a, s in zip(flat_args, flat_specs)]
+    )
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool, save: bool = True
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    skip = cell_is_skipped(cfg, shape)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "skip",
+        "reason": skip,
+    }
+    if skip:
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.flatten())
+    t0 = time.time()
+    with active_mesh(mesh):
+        step, args, in_shardings = build_cell(cfg, shape, mesh)
+        lowered = jax.jit(step, in_shardings=in_shardings).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        terms = roofline_from_compiled(compiled, chips)
+
+    result |= {
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None
+            ),
+        },
+        "roofline": terms.as_dict(),
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        fn = f"{arch}_{shape_name}_{mesh_name}.json"
+        with open(os.path.join(RESULTS_DIR, fn), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True]
+    if args.multi_pod or args.multi_pod_only:
+        meshes = [True]
+    elif args.single_pod_only:
+        meshes = [False]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    r = run_cell(arch, shape, mp)
+                except Exception as e:  # a failing cell is a bug — report it
+                    traceback.print_exc()
+                    r = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "FAIL",
+                        "reason": f"{type(e).__name__}: {e}",
+                    }
+                    failures += 1
+                tag = r["status"]
+                extra = ""
+                if tag == "ok":
+                    ro = r["roofline"]
+                    extra = (
+                        f" compute={ro['compute_s']*1e3:.1f}ms"
+                        f" memory={ro['memory_s']*1e3:.1f}ms"
+                        f" collective={ro['collective_s']*1e3:.1f}ms"
+                        f" dominant={ro['dominant']}"
+                        f" (compile {r['compile_s']}s)"
+                    )
+                elif tag == "skip":
+                    extra = f" ({r['reason']})"
+                print(f"[{tag:4s}] {arch:22s} {shape:12s} {r['mesh']:8s}{extra}",
+                      flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells FAILED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``cost_analysis()`` supplies HLO FLOPs and bytes; collective bytes are NOT
+in cost_analysis, so we parse the optimized HLO text and sum the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Hardware constants: TPU v5e-class — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  bf16[256,4096,7168]{2,1,0}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+# Optimized (post-SPMD) HLO: result type(s) precede the op name; operands
+# are %name references, so we meter RESULT types — per-device shard shapes.
+#   %all-gather.93 = f32[896,4096]{0,1} all-gather(%fusion), channel_id=...
+_OP_LINE_RE = re.compile(
+    r"=\s*(\(.*?\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+# ring-algorithm wire factor per byte of per-device buffer
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,  # reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    """Per-device wire bytes by collective kind (result-shard sizes × ring
+    factor), parsed from the per-device optimized HLO module."""
+
+    bytes_by_kind: dict[str, int] = field(default_factory=dict)
+    count_by_kind: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        result_types, kind = m.group(1), m.group(2)
+        nbytes = sum(
+            _shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_types)
+        )
+        nbytes = int(nbytes * _WIRE_FACTOR[kind])
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+    collective_detail: dict = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "collective_detail": self.collective_detail,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int) -> RooflineTerms:
+    """cost_analysis()/as_text() on the post-SPMD module are PER-DEVICE
+    (verified empirically); globalize by × chips so the three-term formulas
+    (X_global / (chips × peak)) apply unchanged."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0)) * chips
+    nbytes = float(ca.get("bytes accessed", 0.0)) * chips
+    stats = collective_bytes(compiled.as_text())
+    return RooflineTerms(
+        flops=flops,
+        bytes_accessed=nbytes,
+        collective_bytes=float(stats.total_bytes) * chips,
+        chips=chips,
+        collective_detail={
+            "bytes": stats.bytes_by_kind,
+            "count": stats.count_by_kind,
+        },
+    )
+
+
+def model_flops(cfg, shape, params_total: int, params_active: int) -> float:
+    """6·N·D for train (N = active params, D = tokens); 2·N·B for decode."""
+    tokens = shape.global_batch * shape.seq_len
+    n = params_active
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,246 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline-term derivation for every (arch × shape) cell on the single-pod
+mesh (the multi-pod pass in dryrun.py proves the pod axis; the roofline
+table is single-pod per the assignment).
+
+Method — affine layer extrapolation: ``cost_analysis`` does not multiply
+while-loop bodies by their trip count, so scanned full-depth models
+undercount.  Every architecture is a repeated unit (layer / moe-layer /
+mLSTM+sLSTM pair / rec-rec-attn triple / enc+dec layer pair) on top of a
+fixed entry (embed/unembed/loss/optimizer).  We lower UNROLLED 1-unit and
+2-unit variants, so  per_unit = t(2) − t(1)  and
+``total = t(1) + per_unit × (units_full − 1)`` — exact for uniform stacks,
+affine-approximate for the hybrid remainder (noted in the row).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--arch A] [--shape S]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import math  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.distributed.sharding import active_mesh  # noqa: E402
+from repro.launch.dryrun import build_cell, cell_is_skipped  # noqa: E402
+from repro.launch.hlo_analysis import (  # noqa: E402
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    model_flops,
+    roofline_from_compiled,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.config import SHAPES, ArchConfig  # noqa: E402
+from repro.models.registry import get_model  # noqa: E402
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "../../../results/roofline"
+)
+
+
+def unit_variants(cfg: ArchConfig):
+    """(cfg_1unit, cfg_2unit, units_full, note)"""
+    base = cfg.with_(scan_layers=False)
+    if cfg.family == "moe":
+        nd = cfg.moe.first_dense_layers
+        return (
+            base.with_(n_layers=nd + 1),
+            base.with_(n_layers=nd + 2),
+            cfg.n_layers - nd,
+            "unit=moe-layer (dense first layer in entry)",
+        )
+    if cfg.family == "ssm":
+        return (
+            base.with_(n_layers=2),
+            base.with_(n_layers=4),
+            cfg.n_layers // 2,
+            "unit=(mLSTM,sLSTM) pair",
+        )
+    if cfg.family == "hybrid":
+        plen = len(cfg.hybrid.pattern)
+        return (
+            base.with_(n_layers=plen),
+            base.with_(n_layers=2 * plen),
+            cfg.n_layers / plen,
+            "unit=(rec,rec,attn) triple; remainder≈2/3 unit (affine approx)",
+        )
+    if cfg.family == "audio":
+        return (
+            base.with_(n_layers=1, encoder_layers=1),
+            base.with_(n_layers=2, encoder_layers=2),
+            cfg.n_layers,
+            "unit=enc+dec layer pair",
+        )
+    return (
+        base.with_(n_layers=1),
+        base.with_(n_layers=2),
+        cfg.n_layers,
+        "unit=decoder layer",
+    )
+
+
+def count_params(cfg: ArchConfig) -> tuple[int, int]:
+    """(total, active) parameter counts from eval_shape (no allocation)."""
+    model = get_model(cfg)
+    shapes = jax.eval_shape(
+        lambda: model.init_params(cfg, jax.random.PRNGKey(0))[0]
+    )
+    flat = jax.tree.flatten_with_path(shapes)[0]
+    total = active = 0
+    for path, leaf in flat:
+        n = math.prod(leaf.shape)
+        total += n
+        keys = "/".join(str(p) for p in path)
+        if cfg.moe and any(
+            f"'{w}'" in keys for w in ("w_gate", "w_up", "w_down")
+        ) and "'ffn'" in keys:
+            active += n * cfg.moe.top_k / cfg.moe.num_experts
+        else:
+            active += n
+    return int(total), int(active)
+
+
+def _lower_terms(cfg: ArchConfig, shape, mesh) -> RooflineTerms:
+    with active_mesh(mesh):
+        step, args, in_shardings = build_cell(cfg, shape, mesh)
+        compiled = jax.jit(step, in_shardings=in_shardings).lower(
+            *args
+        ).compile()
+        return roofline_from_compiled(compiled, len(mesh.devices.flatten()))
+
+
+def _extrapolate(t1: RooflineTerms, t2: RooflineTerms, units: float):
+    def ext(a, b):
+        # affine: total = t1 + (t2 - t1) · (units − 1).  When fusion noise
+        # makes t2 < t1 (seen on the hybrid family), fall back to a pure
+        # proportional model (entry ≈ 0, per-unit = t2/2) — never negative.
+        per_unit = b - a
+        if per_unit < 0.05 * max(b, 1e-30):
+            return (b / 2.0) * units
+        return a + per_unit * (units - 1)
+
+    detail = {
+        "bytes": {
+            k: int(
+                ext(
+                    t1.collective_detail["bytes"].get(k, 0),
+                    t2.collective_detail["bytes"].get(k, 0),
+                )
+            )
+            for k in set(t1.collective_detail["bytes"])
+            | set(t2.collective_detail["bytes"])
+        },
+        "count": {
+            k: int(
+                ext(
+                    t1.collective_detail["count"].get(k, 0),
+                    t2.collective_detail["count"].get(k, 0),
+                )
+            )
+            for k in set(t1.collective_detail["count"])
+            | set(t2.collective_detail["count"])
+        },
+    }
+    return RooflineTerms(
+        flops=ext(t1.flops, t2.flops),
+        bytes_accessed=ext(t1.bytes_accessed, t2.bytes_accessed),
+        collective_bytes=ext(t1.collective_bytes, t2.collective_bytes),
+        chips=t1.chips,
+        collective_detail=detail,
+    )
+
+
+def run_cell(arch: str, shape_name: str, save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_is_skipped(cfg, shape)
+    if skip:
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "status": "skip",
+            "reason": skip,
+        }
+    mesh = make_production_mesh(multi_pod=False)
+    c1, c2, units, note = unit_variants(cfg)
+    t0 = time.time()
+    t1 = _lower_terms(c1, shape, mesh)
+    t2 = _lower_terms(c2, shape, mesh)
+    terms = _extrapolate(t1, t2, units)
+    total_p, active_p = count_params(cfg)
+    mf = model_flops(cfg, shape, total_p, active_p)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "16x16",
+        "status": "ok",
+        "method": note,
+        "units": units,
+        "elapsed_s": round(time.time() - t0, 1),
+        "params_total": total_p,
+        "params_active": active_p,
+        "model_flops": mf,
+        "useful_ratio": mf / terms.flops if terms.flops else None,
+        "roofline": terms.as_dict(),
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(
+            os.path.join(RESULTS_DIR, f"{arch}_{shape_name}.json"), "w"
+        ) as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            try:
+                r = run_cell(arch, shape)
+            except Exception as e:
+                traceback.print_exc()
+                r = {
+                    "arch": arch,
+                    "shape": shape,
+                    "status": "FAIL",
+                    "reason": f"{type(e).__name__}: {e}",
+                }
+                failures += 1
+            if r["status"] == "ok":
+                ro = r["roofline"]
+                print(
+                    f"[ok  ] {arch:22s} {shape:12s} "
+                    f"compute={ro['compute_s']*1e3:8.2f}ms "
+                    f"memory={ro['memory_s']*1e3:8.2f}ms "
+                    f"collective={ro['collective_s']*1e3:8.2f}ms "
+                    f"dom={ro['dominant']:10s} "
+                    f"useful={r['useful_ratio']:.2f}",
+                    flush=True,
+                )
+            else:
+                print(
+                    f"[{r['status']:4s}] {arch:22s} {shape:12s} "
+                    f"({r.get('reason')})",
+                    flush=True,
+                )
+    if failures:
+        raise SystemExit(f"{failures} roofline cells FAILED")
+
+
+if __name__ == "__main__":
+    main()

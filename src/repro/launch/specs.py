@@ -1,0 +1,85 @@
+"""Input specs (ShapeDtypeStruct stand-ins) and demo batches per arch × shape.
+
+``input_specs`` feeds the dry-run (no allocation); ``demo_batch`` builds tiny
+real arrays for CPU smoke tests.  The modality frontends are stubs: audio
+frames / vision patches arrive as precomputed embeddings, per the assignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig, ShapeConfig
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    inputs = {"tokens": tok}
+    in_specs = {"tokens": P("data", None)}
+    if cfg.family == "audio":
+        inputs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.cdtype)
+        in_specs["frames"] = P("data", None, None)
+    if cfg.family == "vlm":
+        inputs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patch_tokens, cfg.d_model), cfg.cdtype
+        )
+        in_specs["patch_embeds"] = P("data", None, None)
+    batch = {"inputs": inputs, "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    specs = {"inputs": in_specs, "labels": P("data", None)}
+    return batch, specs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(cache, tokens, offset) specs for one decode step at kv-len seq_len."""
+    from repro.models.registry import get_model
+
+    B, S = shape.global_batch, shape.seq_len
+    model = get_model(cfg)
+    kwargs = {"enc_len": S} if cfg.family == "audio" else {}
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_kv_cache(cfg, B, S, **kwargs)[0]
+    )
+    small_kwargs = {"enc_len": 1} if cfg.family == "audio" else {}
+    _, cache_spec = model.init_kv_cache(cfg, 1, 1, **small_kwargs)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    off = jax.ShapeDtypeStruct((), jnp.int32)
+    return (cache_shapes, tok, off), (cache_spec, P("data", None), P())
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    inputs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    in_specs = {"tokens": P("data", None)}
+    if cfg.family == "audio":
+        inputs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.cdtype)
+        in_specs["frames"] = P("data", None, None)
+    if cfg.family == "vlm":
+        inputs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patch_tokens, cfg.d_model), cfg.cdtype
+        )
+        in_specs["patch_embeds"] = P("data", None, None)
+    return {"inputs": inputs}, {"inputs": in_specs}
+
+
+def demo_batch(cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+    """Small concrete training batch for CPU tests/examples."""
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq + 1)))
+    inputs = {"tokens": tokens[:, :-1].astype(jnp.int32)}
+    if cfg.family == "audio":
+        inputs["frames"] = jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32),
+            cfg.cdtype,
+        )
+    if cfg.family == "vlm":
+        inputs["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.num_patch_tokens, cfg.d_model)).astype(
+                np.float32
+            ),
+            cfg.cdtype,
+        )
+    return {"inputs": inputs, "labels": tokens[:, 1:].astype(jnp.int32)}

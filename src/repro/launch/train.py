@@ -1,0 +1,68 @@
+"""Training launcher.
+
+Laptop scale:   PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+                    --reduced --steps 20
+Production:     same command without --reduced on a real TPU slice; the mesh
+                comes from make_production_mesh() and params/optimizer are
+                sharded by the logical rules in repro.distributed.sharding.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import SyntheticCorpus
+from repro.distributed.sharding import active_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="granite-8b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU scale)")
+    ap.add_argument("--signsgd", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    n_dev = len(jax.devices())
+    mesh = (
+        make_production_mesh(multi_pod=args.multi_pod)
+        if n_dev >= 256
+        else make_host_mesh(data=min(2, n_dev), model=1)
+    )
+    tcfg = TrainerConfig(
+        opt=OptimizerConfig(
+            lr=args.lr, mode="signsgd" if args.signsgd else "adamw"
+        ),
+        ckpt_dir=args.ckpt_dir,
+        compress_grads="signsgd" if args.signsgd else "none",
+    )
+    with active_mesh(mesh):
+        trainer = Trainer(cfg, tcfg, mesh=mesh)
+        if trainer.maybe_restore():
+            print(f"restored at step {trainer.step_num}")
+        corpus = SyntheticCorpus(
+            vocab=cfg.vocab, seq_len=args.seq, num_samples=2048
+        )
+        hist = trainer.train(
+            corpus.batches(args.batch), num_steps=args.steps, log_every=5
+        )
+    print(f"final loss {hist[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

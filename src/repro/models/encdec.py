@@ -1,0 +1,266 @@
+"""Whisper-style encoder–decoder backbone (whisper-medium, [audio]).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d).  Encoder = bidirectional
+self-attention stack; decoder = causal self-attention + cross-attention.
+Absolute position embeddings (sinusoidal enc / learned dec), LayerNorm, GELU
+MLP, MHA (kv = heads).  Decode caches decoder self-KV + precomputed cross-KV.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, stacked
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    FSDP,
+    TP,
+    _init_dense,
+    attention_fwd,
+    embed_fwd,
+    init_attention,
+    init_embedding,
+    init_layernorm,
+    init_mlp,
+    layernorm_fwd,
+    mlp_fwd,
+    unembed_fwd,
+)
+
+MAX_DEC_POS = 33024  # learned decoder position table — covers prefill_32k
+# (+ margin for decode offsets; real whisper uses 448, the assigned 32k
+# shapes exercise the backbone beyond that — noted in DESIGN.md)
+
+
+def _sinusoid(max_len, d):
+    pos = np.arange(max_len)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * dim / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32
+    )
+
+
+def init_enc_layer(cfg, key):
+    k1, k2 = jax.random.split(key)
+    ap, as_ = init_attention(
+        k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, None, cfg.pdtype, bias=True
+    )
+    mp, ms = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.pdtype, gated=False, bias=True)
+    n1p, n1s = init_layernorm(cfg.d_model, cfg.pdtype)
+    n2p, n2s = init_layernorm(cfg.d_model, cfg.pdtype)
+    return (
+        {"attn": ap, "mlp": mp, "norm1": n1p, "norm2": n2p},
+        {"attn": as_, "mlp": ms, "norm1": n1s, "norm2": n2s},
+    )
+
+
+def init_dec_layer(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    sp, ss = init_attention(
+        k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, None, cfg.pdtype, bias=True
+    )
+    xp, xs = init_attention(
+        k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, None, cfg.pdtype, bias=True
+    )
+    mp, ms = init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.pdtype, gated=False, bias=True)
+    norms = [init_layernorm(cfg.d_model, cfg.pdtype) for _ in range(3)]
+    return (
+        {
+            "self": sp,
+            "cross": xp,
+            "mlp": mp,
+            "norm1": norms[0][0],
+            "norm2": norms[1][0],
+            "norm3": norms[2][0],
+        },
+        {
+            "self": ss,
+            "cross": xs,
+            "mlp": ms,
+            "norm1": norms[0][1],
+            "norm2": norms[1][1],
+            "norm3": norms[2][1],
+        },
+    )
+
+
+def init_params(cfg: ArchConfig, key):
+    n_enc = cfg.encoder_layers
+    keys = jax.random.split(key, 4)
+    emb_p, emb_s = init_embedding(keys[0], cfg.vocab, cfg.d_model, cfg.pdtype)
+    enc_keys = jax.random.split(keys[1], n_enc)
+    dec_keys = jax.random.split(keys[2], cfg.n_layers)
+    enc = jax.vmap(lambda k: init_enc_layer(cfg, k)[0])(enc_keys)
+    dec = jax.vmap(lambda k: init_dec_layer(cfg, k)[0])(dec_keys)
+    _, enc_spec = init_enc_layer(cfg, enc_keys[0])
+    _, dec_spec = init_dec_layer(cfg, dec_keys[0])
+    dec_pos = (
+        jax.random.normal(keys[3], (MAX_DEC_POS, cfg.d_model)) * 0.01
+    ).astype(cfg.pdtype)
+    params = {
+        "embed": emb_p,
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "dec_pos": dec_pos,
+        "enc_norm": init_layernorm(cfg.d_model, cfg.pdtype)[0],
+        "dec_norm": init_layernorm(cfg.d_model, cfg.pdtype)[0],
+    }
+    specs = {
+        "embed": emb_s,
+        "enc_layers": stacked(enc_spec),
+        "dec_layers": stacked(dec_spec),
+        "dec_pos": P(None, FSDP),
+        "enc_norm": init_layernorm(cfg.d_model)[1],
+        "dec_norm": init_layernorm(cfg.d_model)[1],
+    }
+    return params, specs
+
+
+def _scan(cfg, fn, x, stacked_params, *extra):
+    if cfg.remat:
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        return jax.lax.scan(fn, x, (stacked_params, *extra))
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], stacked_params)
+        ex = tuple(jax.tree.map(lambda a: a[i], e) for e in extra)
+        x, y = fn(x, (sl, *ex))
+        ys.append(y)
+    ys = (
+        None
+        if all(y is None for y in ys)
+        else jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    )
+    return x, ys
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames: (B, S_enc, d) precomputed embeddings (frontend stub)."""
+    x = frames.astype(cfg.cdtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model)[None].astype(cfg.cdtype)
+    x = constrain(x, "data", None, None)
+
+    def step(h, xs):
+        (lp,) = xs
+        a = layernorm_fwd(lp["norm1"], h)
+        a, _ = attention_fwd(
+            lp["attn"],
+            a,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            use_rope=False,
+            causal=False,
+        )
+        h = h + a
+        m = layernorm_fwd(lp["norm2"], h)
+        h = h + mlp_fwd(lp["mlp"], m, "gelu")
+        return constrain(h, "data", None, None), None
+
+    x, _ = _scan(cfg, step, x, params["enc_layers"])
+    return layernorm_fwd(params["enc_norm"], x)
+
+
+def _dec_layer(cfg, lp, x, enc_out, kv_cache=None, cache_offset=None):
+    a = layernorm_fwd(lp["norm1"], x)
+    a, new_kv = attention_fwd(
+        lp["self"],
+        a,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        use_rope=False,
+        kv_cache=kv_cache,
+        cache_offset=cache_offset,
+    )
+    x = x + a
+    c = layernorm_fwd(lp["norm2"], x)
+    c, _ = attention_fwd(
+        lp["cross"],
+        c,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        use_rope=False,
+        causal=False,
+        kv_x=enc_out,
+    )
+    x = x + c
+    m = layernorm_fwd(lp["norm3"], x)
+    x = x + mlp_fwd(lp["mlp"], m, "gelu")
+    return constrain(x, "data", None, None), new_kv
+
+
+def decode_stack(cfg, params, tokens, enc_out, cache=None, offset=0):
+    B, S = tokens.shape
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], offset, S, 0)
+    x = x + pos[None].astype(cfg.cdtype)
+    x = constrain(x, "data", None, None)
+
+    if cache is None:
+
+        def step(h, xs):
+            (lp,) = xs
+            h, _ = _dec_layer(cfg, lp, h, enc_out)
+            return h, None
+
+        x, _ = _scan(cfg, step, x, params["dec_layers"])
+        new_cache = None
+    else:
+
+        def step(h, xs):
+            lp, ck, cv = xs
+            h, kv = _dec_layer(
+                cfg, lp, h, enc_out, kv_cache=(ck, cv), cache_offset=offset
+            )
+            return h, kv
+
+        x, kv = _scan(cfg, step, x, params["dec_layers"], cache["k"], cache["v"])
+        new_cache = {"k": kv[0], "v": kv[1], "enc_out": enc_out}
+    x = layernorm_fwd(params["dec_norm"], x)
+    return constrain(unembed_fwd(params["embed"], x), "data", None, "model"), new_cache
+
+
+def forward(cfg: ArchConfig, params, tokens, frames):
+    enc_out = encode(cfg, params, frames)
+    logits, _ = decode_stack(cfg, params, tokens, enc_out)
+    return logits
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int = 0):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    cache = {
+        "k": jnp.zeros(shape, cfg.cdtype),
+        "v": jnp.zeros(shape, cfg.cdtype),
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), cfg.cdtype),
+    }
+    spec = {
+        "k": P(None, "data", None, "model", None),
+        "v": P(None, "data", None, "model", None),
+        "enc_out": P("data", None, None),
+    }
+    return cache, spec
+
+
+def prefill(cfg: ArchConfig, params, tokens, frames, max_len):
+    enc_out = encode(cfg, params, frames)
+    cache, _ = init_kv_cache(
+        cfg, tokens.shape[0], max_len, enc_len=frames.shape[1]
+    )
+    logits, cache = decode_stack(cfg, params, tokens, enc_out, cache, offset=0)
+    return logits[:, -1:], cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, offset):
+    logits, cache = decode_stack(
+        cfg, params, tokens, cache["enc_out"].astype(cfg.cdtype), cache, offset
+    )
+    return logits, cache

@@ -1,0 +1,347 @@
+"""Shared model layers: norms, embeddings, RoPE, GQA attention, MLPs.
+
+Functional style: ``init_*`` builds a param pytree (+ a parallel PartitionSpec
+pytree via ``repro.distributed.sharding`` rules), ``*_fwd`` applies it.  All
+matmul-bearing layers take a ``compute_dtype`` so big configs run bf16 on the
+MXU while tests run f32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = dict[str, Any]
+
+# Logical sharding axes; resolved against the active mesh by
+# repro.distributed.sharding.  "fsdp" = ("pod","data") when present.
+FSDP = "fsdp"
+TP = "model"
+
+
+def _init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": P(None)}
+
+
+def rmsnorm_fwd(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d, dtype=jnp.float32):
+    return (
+        {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        {"scale": P(None), "bias": P(None)},
+    )
+
+
+def layernorm_fwd(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (
+        x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding  (vocab sharded on TP axis)
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab, d, dtype=jnp.float32):
+    emb = (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+    return {"embedding": emb}, {"embedding": P(TP, FSDP)}
+
+
+def embed_fwd(p, tokens, compute_dtype):
+    return jnp.take(p["embedding"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed_fwd(p, x):
+    # logits in f32 for loss stability
+    return jnp.einsum(
+        "bsd,vd->bsv", x.astype(jnp.float32), p["embedding"].astype(jnp.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0):
+    return 1.0 / (
+        theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta=10_000.0):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    inv = jnp.asarray(rope_frequencies(hd, theta))  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate(
+        [
+            x1 * cos - x2 * sin,
+            x2 * cos + x1 * sin,
+        ],
+        axis=-1,
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full / causal / sliding-window; train + cached decode)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(
+    key,
+    d_model,
+    n_heads,
+    n_kv_heads,
+    head_dim=None,
+    dtype=jnp.float32,
+    bias=False,
+):
+    head_dim = head_dim or d_model // n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _init_dense(k1, d_model, n_heads * head_dim, dtype),
+        "wk": _init_dense(k2, d_model, n_kv_heads * head_dim, dtype),
+        "wv": _init_dense(k3, d_model, n_kv_heads * head_dim, dtype),
+        "wo": _init_dense(k4, n_heads * head_dim, d_model, dtype),
+    }
+    s = {
+        "wq": P(FSDP, TP),
+        "wk": P(FSDP, TP),
+        "wv": P(FSDP, TP),
+        "wo": P(TP, FSDP),
+    }
+    if bias:
+        p |= {
+            "bq": jnp.zeros((n_heads * head_dim,), dtype),
+            "bk": jnp.zeros((n_kv_heads * head_dim,), dtype),
+            "bv": jnp.zeros((n_kv_heads * head_dim,), dtype),
+            "bo": jnp.zeros((d_model,), dtype),
+        }
+        s |= {"bq": P(TP), "bk": P(TP), "bv": P(TP), "bo": P(None)}
+    return p, s
+
+
+def _mask_bias(q_len, kv_len, offset, window, dtype):
+    """Causal (+ optional sliding-window) additive mask bias."""
+    q_pos = jnp.arange(q_len)[:, None] + offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    ok = kv_pos <= q_pos
+    if window is not None:
+        ok &= kv_pos > q_pos - window
+    return jnp.where(ok, 0.0, jnp.finfo(dtype).min).astype(dtype)
+
+
+BLOCKWISE_KV_BLOCK = 1024
+BLOCKWISE_MIN_KV = 4096  # use the online-softmax path above this kv length
+
+
+def _blockwise_attention(qg, k, v, *, offset, window, causal, scale):
+    """Flash-attention-style online softmax over KV blocks.
+
+    Never materializes the (S_q, S_kv) score matrix — the §Perf fix for the
+    memory-roofline blowup of long-context prefill (hypothesis H1 in
+    EXPERIMENTS.md).  qg: (B, Sq, n_kv, group, hd); k/v: (B, Skv, n_kv, hd).
+    Runs in f32 accumulation with a lax.scan over KV blocks.
+    """
+    B, Sq, NKV, G, hd = qg.shape
+    Skv = k.shape[1]
+    blk = min(BLOCKWISE_KV_BLOCK, Skv)
+    pad = (-Skv) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = k.shape[1] // blk
+    kb = jnp.moveaxis(k.reshape(B, nblk, blk, NKV, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nblk, blk, NKV, hd), 1, 0)
+
+    q32 = qg.astype(jnp.float32) * scale
+    q_pos = jnp.arange(Sq) + offset  # absolute positions of queries
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, start = xs
+        s = jnp.einsum(
+            "bsngh,btnh->bngst", q32, kblk.astype(jnp.float32)
+        )  # (B, NKV, G, Sq, blk)
+        kv_pos = start + jnp.arange(blk)
+        ok = jnp.ones((Sq, blk), bool)
+        if causal:
+            ok &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(ok[None, None, None], s, -jnp.inf)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        # guard fully-masked rows (m_new = -inf)
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(ok[None, None, None], p, 0.0)
+        corr = jnp.where(
+            jnp.isfinite(m), jnp.exp(m - safe_m), 0.0
+        )
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bngst,btnh->bngsh", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, NKV, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, NKV, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, NKV, G, Sq, hd), jnp.float32)
+    starts = jnp.arange(nblk) * blk
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,NKV,G,Sq,hd)
+    return jnp.moveaxis(out, 3, 1).reshape(B, Sq, NKV * G * hd)
+
+
+def attention_fwd(
+    p,
+    x,
+    *,
+    n_heads,
+    n_kv_heads,
+    positions=None,
+    rope_theta=10_000.0,
+    use_rope=True,
+    window=None,
+    causal=True,
+    kv_cache=None,  # (k, v) each (B, S_max, n_kv, hd) + write offset
+    cache_offset=None,
+    kv_x=None,  # cross-attention source (enc-dec)
+    impl="auto",  # "naive" | "blockwise" | "auto"
+):
+    """Returns (out, new_kv) — new_kv is None unless kv_cache is provided."""
+    B, S, D = x.shape
+    hd = p["wq"].shape[1] // n_heads
+    cdt = x.dtype
+
+    def proj(w, b, src, nh):
+        y = jnp.einsum("bsd,dh->bsh", src, w.astype(cdt))
+        if b is not None:
+            y = y + b.astype(cdt)
+        return y.reshape(src.shape[0], src.shape[1], nh, hd)
+
+    src_kv = x if kv_x is None else kv_x
+    q = proj(p["wq"], p.get("bq"), x, n_heads)
+    k = proj(p["wk"], p.get("bk"), src_kv, n_kv_heads)
+    v = proj(p["wv"], p.get("bv"), src_kv, n_kv_heads)
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :] + (
+            0 if cache_offset is None else cache_offset
+        )
+        positions = jnp.broadcast_to(positions, (B, S))
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        if kv_x is None:
+            k = apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_offset, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_offset, 0, 0))
+        k, v = ck.astype(cdt), cv.astype(cdt)
+        new_cache = (ck, cv)
+
+    group = n_heads // n_kv_heads
+    kv_len = k.shape[1]
+    qg = q.reshape(B, S, n_kv_heads, group, hd)
+    offset = cache_offset if kv_cache is not None else 0
+    is_causal = causal or kv_cache is not None
+
+    use_blockwise = impl == "blockwise" or (
+        impl == "auto" and kv_len >= BLOCKWISE_MIN_KV
+    )
+    if use_blockwise:
+        out = _blockwise_attention(
+            qg,
+            k,
+            v,
+            offset=offset,
+            window=window,
+            causal=is_causal,
+            scale=1.0 / math.sqrt(hd),
+        ).astype(cdt)
+    else:
+        logits = jnp.einsum("bsngh,btnh->bngst", qg, k) / math.sqrt(hd)
+        logits = logits.astype(jnp.float32)
+        if is_causal:
+            bias = _mask_bias(S, kv_len, offset, window, jnp.float32)
+            logits = logits + bias[None, None, None, :, :]
+        attn = jax.nn.softmax(logits, axis=-1).astype(cdt)
+        out = jnp.einsum("bngst,btnh->bsngh", attn, v).reshape(B, S, -1)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
+    if p.get("bo") is not None:
+        out = out + p["bo"].astype(cdt)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32, gated=True, bias=False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": _init_dense(k1, d_model, d_ff, dtype),
+        "down": _init_dense(k2, d_ff, d_model, dtype),
+    }
+    s = {"up": P(FSDP, TP), "down": P(TP, FSDP)}
+    if gated:
+        p["gate"] = _init_dense(k3, d_model, d_ff, dtype)
+        s["gate"] = P(FSDP, TP)
+    if bias:
+        p |= {"b_up": jnp.zeros((d_ff,), dtype), "b_down": jnp.zeros((d_model,), dtype)}
+        s |= {"b_up": P(TP), "b_down": P(None)}
+    return p, s
+
+
+def mlp_fwd(p, x, activation="silu"):
+    cdt = x.dtype
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[
+        activation
+    ]
+    h = jnp.einsum("bsd,df->bsf", x, p["up"].astype(cdt))
+    if p.get("b_up") is not None:
+        h = h + p["b_up"].astype(cdt)
+    if "gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["gate"].astype(cdt))
+        h = act(g) * h
+    else:
+        h = act(h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["down"].astype(cdt))
+    if p.get("b_down") is not None:
+        out = out + p["b_down"].astype(cdt)
+    return out

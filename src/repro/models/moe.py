@@ -1,0 +1,444 @@
+"""Mixture-of-Experts decoder (deepseek-v2-lite, kimi-k2) with optional MLA.
+
+* Routing: top-k softmax gating with per-group capacity (GShard-style drops),
+  computed with a sort-free rank: position-in-expert comes from a cumulative
+  one-hot count per group — groups are sequences, so the dispatch scatter is
+  group-local and shards cleanly over the data axis while experts shard over
+  the model axis (EP).
+* Expert compute: batched einsum over the (E, C) dispatch buffer — dense
+  matmul FLOPs ∝ tokens × top_k × capacity_factor.
+* Shared experts: a dense SwiGLU MLP applied to every token (DeepSeek).
+* MLA (DeepSeek): low-rank compressed KV (kv_lora_rank) + decoupled RoPE
+  head; the decode cache stores the compressed c_kv + k_pe only.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, stacked
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    FSDP,
+    TP,
+    _init_dense,
+    apply_rope,
+    attention_fwd,
+    embed_fwd,
+    init_attention,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp_fwd,
+    rmsnorm_fwd,
+    unembed_fwd,
+)
+
+# ---------------------------------------------------------------------------
+# MoE FFN
+# ---------------------------------------------------------------------------
+
+
+def init_moe_ffn(key, cfg: ArchConfig):
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": _init_dense(k1, d, E, jnp.float32),
+        "w_gate": (jax.random.normal(k2, (E, d, f)) / math.sqrt(d)).astype(
+            cfg.pdtype
+        ),
+        "w_up": (jax.random.normal(k3, (E, d, f)) / math.sqrt(d)).astype(
+            cfg.pdtype
+        ),
+        "w_down": (jax.random.normal(k4, (E, f, d)) / math.sqrt(f)).astype(
+            cfg.pdtype
+        ),
+    }
+    s = {
+        "router": P(FSDP, None),
+        "w_gate": P(TP, FSDP, None),
+        "w_up": P(TP, FSDP, None),
+        "w_down": P(TP, None, FSDP),
+    }
+    if m.num_shared:
+        sp, ss = init_mlp(k5, d, f * m.num_shared, cfg.pdtype, gated=True)
+        p["shared"] = sp
+        s["shared"] = ss
+    return p, s
+
+
+def moe_ffn_fwd(p, x, cfg: ArchConfig):
+    """x: (B, S, d). Groups = sequences; capacity per group."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    C = max(1, int(math.ceil(m.capacity_factor * S * k / E)))
+    cdt = x.dtype
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"]
+    )  # (B,S,E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate_vals = gate_vals / (
+        jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9
+    )
+
+    # position-in-expert within each group: cumulative count over (S*k)
+    # assignments in order.  one_hot (B, S*k, E) int32 — S*k*E ints/group.
+    flat_e = eidx.reshape(B, S * k)
+    one_hot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (B, S*k, E)
+    pos = jnp.cumsum(one_hot, axis=1) - 1  # count before + self
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]
+    keep = pos < C  # capacity drop (B, S*k)
+
+    b_ix = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S * k))
+    pos_c = jnp.where(keep, pos, C)  # dropped -> scratch slot C
+
+    if cfg.moe_dispatch == "gather":
+        # §Perf fix: scatter only int32 slot->assignment indices (tiny),
+        # then gather tokens locally — x is replicated across the EP axis,
+        # so the (B,E,C,d) buffer materializes WITHOUT the full-buffer
+        # all-reduce the f32 scatter-add provokes under GSPMD.
+        a_ix = jnp.broadcast_to(
+            jnp.arange(S * k, dtype=jnp.int32)[None], (B, S * k)
+        )
+        slot_src = jnp.full((B, E, C + 1), S * k, jnp.int32)
+        slot_src = slot_src.at[b_ix, flat_e, pos_c].set(a_ix)
+        slot_src = slot_src[:, :, :C]
+        valid = slot_src < S * k
+        tok_src = jnp.minimum(slot_src // k, S - 1)
+        x_g = x[jnp.arange(B)[:, None, None], tok_src]  # (B,E,C,d)
+        buf = jnp.where(valid[..., None], x_g, jnp.zeros((), cdt))
+    else:
+        # baseline (recorded): f32 scatter-add of token vectors
+        xk = jnp.repeat(x, k, axis=1)  # (B, S*k, d) token per assignment
+        buf = jnp.zeros((B, E, C + 1, d), cdt)
+        buf = buf.at[b_ix, flat_e, pos_c].add(xk)
+        buf = buf[:, :, :C, :]
+    buf = constrain(buf, "data", "model", None, None)
+
+    # expert compute (EP over the model axis)
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(cdt))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(cdt))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(cdt))
+    out_buf = constrain(out_buf, "data", "model", None, None)
+
+    # combine: gather per assignment, weight, sum over k
+    gathered = out_buf[b_ix, flat_e, jnp.minimum(pos, C - 1)]  # (B,S*k,d)
+    w = (gate_vals.reshape(B, S * k) * keep.astype(jnp.float32)).astype(cdt)
+    out = jnp.sum(
+        (gathered * w[..., None]).reshape(B, S, k, d), axis=2
+    )
+
+    if "shared" in p:
+        out = out + mlp_fwd(p["shared"], x, "silu")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig):
+    a = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    r, rd, nd, vd = a.kv_lora_rank, a.rope_head_dim, a.nope_head_dim, a.v_head_dim
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "w_dkv": _init_dense(k1, d, r + rd, cfg.pdtype),
+        "w_uk": _init_dense(k2, r, H * nd, cfg.pdtype),
+        "w_uv": _init_dense(k3, r, H * vd, cfg.pdtype),
+        "w_q": _init_dense(k4, d, H * (nd + rd), cfg.pdtype),
+        "w_o": _init_dense(k5, H * vd, d, cfg.pdtype),
+        "kv_norm": jnp.ones((r,), cfg.pdtype),
+    }
+    s = {
+        "w_dkv": P(FSDP, None),
+        "w_uk": P(None, TP),
+        "w_uv": P(None, TP),
+        "w_q": P(FSDP, TP),
+        "w_o": P(TP, FSDP),
+        "kv_norm": P(None),
+    }
+    return p, s
+
+
+def mla_fwd(p, x, cfg: ArchConfig, kv_cache=None, cache_offset=None):
+    """MLA attention; cache stores (c_kv normed, k_pe) of shape (B,S,r+rd)."""
+    a = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    r, rd, nd, vd = a.kv_lora_rank, a.rope_head_dim, a.nope_head_dim, a.v_head_dim
+    cdt = x.dtype
+    offset = 0 if cache_offset is None else cache_offset
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :] + offset, (B, S))
+
+    ckv_pe = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(cdt))
+    c_kv, k_pe = ckv_pe[..., :r], ckv_pe[..., r:]
+    c_kv = rmsnorm_fwd({"scale": p["kv_norm"]}, c_kv)
+    k_pe = apply_rope(
+        k_pe[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+
+    new_cache = None
+    if kv_cache is not None:
+        cc, cp = kv_cache  # (B, Smax, r), (B, Smax, rd)
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, offset, 0))
+        cp = jax.lax.dynamic_update_slice(cp, k_pe.astype(cp.dtype), (0, offset, 0))
+        c_kv, k_pe = cc.astype(cdt), cp.astype(cdt)
+        new_cache = (cc, cp)
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["w_q"].astype(cdt)).reshape(
+        B, S, H, nd + rd
+    )
+    q_nope, q_pe = q[..., :nd], q[..., nd:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    k_nope = jnp.einsum("btr,rh->bth", c_kv, p["w_uk"].astype(cdt)).reshape(
+        B, -1, H, nd
+    )
+    v = jnp.einsum("btr,rh->bth", c_kv, p["w_uv"].astype(cdt)).reshape(
+        B, -1, H, vd
+    )
+    kv_len = k_nope.shape[1]
+
+    scale = 1.0 / math.sqrt(nd + rd)
+    logits = (
+        jnp.einsum("bshn,bthn->bhst", q_nope, k_nope)
+        + jnp.einsum("bshr,btr->bhst", q_pe, k_pe)
+    ) * scale
+    logits = logits.astype(jnp.float32)
+
+    from repro.models.layers import _mask_bias
+
+    bias = _mask_bias(S, kv_len, offset, None, jnp.float32)
+    logits = logits + bias[None, None, :, :]
+    attn = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    out = jnp.einsum("bhst,bthv->bshv", attn, v).reshape(B, S, H * vd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["w_o"].astype(cdt))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(cfg, key):
+    if cfg.mla is not None:
+        return init_mla(key, cfg)
+    return init_attention(
+        key,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.resolved_head_dim,
+        cfg.pdtype,
+        bias=cfg.attn_bias,
+    )
+
+
+def _attn_fwd(cfg, p, x, kv_cache=None, cache_offset=None):
+    if cfg.mla is not None:
+        return mla_fwd(p, x, cfg, kv_cache, cache_offset)
+    return attention_fwd(
+        p,
+        x,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        rope_theta=cfg.rope_theta,
+        use_rope=cfg.use_rope,
+        kv_cache=kv_cache,
+        cache_offset=cache_offset,
+    )
+
+
+def init_moe_layer(cfg: ArchConfig, key, dense: bool):
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_s = _init_attn(cfg, k1)
+    if dense:
+        ffn_p, ffn_s = init_mlp(
+            k2, cfg.d_model, cfg.moe.d_ff_dense or cfg.d_ff, cfg.pdtype, True
+        )
+    else:
+        ffn_p, ffn_s = init_moe_ffn(k2, cfg)
+    n1_p, n1_s = init_rmsnorm(cfg.d_model, cfg.pdtype)
+    n2_p, n2_s = init_rmsnorm(cfg.d_model, cfg.pdtype)
+    return (
+        {"attn": attn_p, "ffn": ffn_p, "norm1": n1_p, "norm2": n2_p},
+        {"attn": attn_s, "ffn": ffn_s, "norm1": n1_s, "norm2": n2_s},
+    )
+
+
+def moe_layer_fwd(cfg, lp, x, dense: bool, kv_cache=None, cache_offset=None):
+    h = rmsnorm_fwd(lp["norm1"], x)
+    attn_out, new_cache = _attn_fwd(cfg, lp["attn"], h, kv_cache, cache_offset)
+    x = x + attn_out
+    h = rmsnorm_fwd(lp["norm2"], x)
+    if dense:
+        x = x + mlp_fwd(lp["ffn"], h, cfg.activation)
+    else:
+        x = x + moe_ffn_fwd(lp["ffn"], h, cfg)
+    return constrain(x, "data", None, None), new_cache
+
+
+def init_params(cfg: ArchConfig, key):
+    nd = cfg.moe.first_dense_layers
+    n_moe = cfg.n_layers - nd
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    emb_p, emb_s = init_embedding(keys[0], cfg.vocab, cfg.d_model, cfg.pdtype)
+    params = {"embed": emb_p}
+    specs = {"embed": emb_s}
+    if nd:
+        dense_layers = [
+            init_moe_layer(cfg, keys[1 + i], dense=True)[0] for i in range(nd)
+        ]
+        params["dense_layers"] = jax.tree.map(
+            lambda *a: jnp.stack(a), *dense_layers
+        ) if nd > 1 else jax.tree.map(lambda a: a[None], dense_layers[0])
+        _, dl_spec = init_moe_layer(cfg, keys[1], dense=True)
+        specs["dense_layers"] = stacked(dl_spec)
+    moe_keys = keys[1 + nd :]
+    params["layers"] = jax.vmap(
+        lambda k: init_moe_layer(cfg, k, dense=False)[0]
+    )(jnp.stack(list(moe_keys)))
+    _, ml_spec = init_moe_layer(cfg, moe_keys[0], dense=False)
+    specs["layers"] = stacked(ml_spec)
+    fn_p, fn_s = init_rmsnorm(cfg.d_model, cfg.pdtype)
+    params["final_norm"] = fn_p
+    specs["final_norm"] = fn_s
+    return params, specs
+
+
+def _run_stack(cfg, step_fn, x, stacked_params, *extra):
+    if cfg.remat:
+        step_fn = jax.checkpoint(
+            step_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    if cfg.scan_layers:
+        return jax.lax.scan(step_fn, x, (stacked_params, *extra))
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], stacked_params)
+        ex = tuple(jax.tree.map(lambda a: a[i], e) for e in extra)
+        x, y = step_fn(x, (sl, *ex))
+        ys.append(y)
+    ys = (
+        None
+        if all(y is None for y in ys)
+        else jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    )
+    return x, ys
+
+
+def forward(cfg: ArchConfig, params, tokens):
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    x = constrain(x, "data", None, None)
+
+    if "dense_layers" in params:
+
+        def dstep(h, xs):
+            (lp,) = xs
+            h, _ = moe_layer_fwd(cfg, lp, h, dense=True)
+            return h, None
+
+        x, _ = _run_stack(cfg, dstep, x, params["dense_layers"])
+
+    def step(h, xs):
+        (lp,) = xs
+        h, _ = moe_layer_fwd(cfg, lp, h, dense=False)
+        return h, None
+
+    x, _ = _run_stack(cfg, step, x, params["layers"])
+    x = rmsnorm_fwd(params["final_norm"], x)
+    return constrain(unembed_fwd(params["embed"], x), "data", None, "model")
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.mla is not None:
+        a = cfg.mla
+        mk = lambda d_: jnp.zeros((cfg.n_layers, batch, max_len, d_), cfg.cdtype)
+        cache = {"c_kv": mk(a.kv_lora_rank), "k_pe": mk(a.rope_head_dim)}
+        spec = {
+            "c_kv": P(None, "data", None, None),
+            "k_pe": P(None, "data", None, None),
+        }
+    else:
+        hd = cfg.resolved_head_dim
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+        cache = {
+            "k": jnp.zeros(shape, cfg.cdtype),
+            "v": jnp.zeros(shape, cfg.cdtype),
+        }
+        spec = {
+            "k": P(None, "data", None, "model", None),
+            "v": P(None, "data", None, "model", None),
+        }
+    return cache, spec
+
+
+def _cache_slices(cfg, cache):
+    if cfg.mla is not None:
+        return cache["c_kv"], cache["k_pe"]
+    return cache["k"], cache["v"]
+
+
+def _cache_pack(cfg, a, b):
+    if cfg.mla is not None:
+        return {"c_kv": a, "k_pe": b}
+    return {"k": a, "v": b}
+
+
+def _cached_forward(cfg: ArchConfig, params, tokens, cache, offset):
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    nd = cfg.moe.first_dense_layers
+    ca, cb = _cache_slices(cfg, cache)
+
+    def dstep(h, xs):
+        lp, a, b = xs
+        h, new_kv = moe_layer_fwd(
+            cfg, lp, h, dense=True, kv_cache=(a, b), cache_offset=offset
+        )
+        return h, new_kv
+
+    def step(h, xs):
+        lp, a, b = xs
+        h, new_kv = moe_layer_fwd(
+            cfg, lp, h, dense=False, kv_cache=(a, b), cache_offset=offset
+        )
+        return h, new_kv
+
+    new_a, new_b = [], []
+    if "dense_layers" in params:
+        x, kv = _run_stack(
+            cfg, dstep, x, params["dense_layers"], ca[:nd], cb[:nd]
+        )
+        new_a.append(kv[0])
+        new_b.append(kv[1])
+    x, kv = _run_stack(cfg, step, x, params["layers"], ca[nd:], cb[nd:])
+    new_a.append(kv[0])
+    new_b.append(kv[1])
+    a = jnp.concatenate(new_a) if len(new_a) > 1 else new_a[0]
+    b = jnp.concatenate(new_b) if len(new_b) > 1 else new_b[0]
+    x = rmsnorm_fwd(params["final_norm"], x)
+    logits = constrain(unembed_fwd(params["embed"], x), "data", None, "model")
+    return logits, _cache_pack(cfg, a, b)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, offset):
+    return _cached_forward(cfg, params, tokens, cache, offset)
+
+
+def prefill(cfg: ArchConfig, params, tokens, max_len):
+    cache, _ = init_kv_cache(cfg, tokens.shape[0], max_len)
+    logits, cache = _cached_forward(cfg, params, tokens, cache, 0)
+    return logits[:, -1:], cache

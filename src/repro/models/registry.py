@@ -1,0 +1,28 @@
+"""arch-family -> model implementation dispatch."""
+
+from __future__ import annotations
+
+import importlib
+from types import SimpleNamespace
+
+from repro.models.config import ArchConfig
+
+_FAMILY_MODULES = {
+    "dense": "repro.models.transformer",
+    "vlm": "repro.models.transformer",  # + patch-embedding stub inputs
+    "moe": "repro.models.moe",
+    "ssm": "repro.models.xlstm",
+    "hybrid": "repro.models.rglru",
+    "audio": "repro.models.encdec",
+}
+
+
+def get_model(cfg: ArchConfig) -> SimpleNamespace:
+    mod = importlib.import_module(_FAMILY_MODULES[cfg.family])
+    return SimpleNamespace(
+        init_params=mod.init_params,
+        forward=mod.forward,
+        prefill=mod.prefill,
+        decode_step=mod.decode_step,
+        init_kv_cache=getattr(mod, "init_kv_cache", None),
+    )

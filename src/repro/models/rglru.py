@@ -1,0 +1,476 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local (MQA)
+attention, 2:1 pattern, gated MLP after every temporal block.
+
+* RG-LRU: gated linear recurrence  h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t⊙x_t)
+  with a_t = exp(−c·softplus(Λ)·r_t) — parallelized over time with
+  ``jax.lax.associative_scan`` (TPU-friendly log-depth scan), O(1) decode.
+* Local attention: sliding-window MQA (kv=1) with a **ring-buffer** decode
+  cache of window size — `long_500k` decode state is O(window), so this
+  family runs the long-context shape.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, stacked
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    FSDP,
+    TP,
+    _init_dense,
+    apply_rope,
+    embed_fwd,
+    init_attention,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp_fwd,
+    rmsnorm_fwd,
+    unembed_fwd,
+)
+
+LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+
+def init_recurrent_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    dr = cfg.hybrid.lru_dim or d
+    cw = cfg.hybrid.conv_width
+    ks = jax.random.split(key, 7)
+    # Λ init: a ≈ uniform(0.9, 0.999) as in Griffin
+    u = jax.random.uniform(ks[0], (dr,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / LRU_C))  # softplus^-1(-ln u / c)
+    p = {
+        "w_gate": _init_dense(ks[1], d, dr, cfg.pdtype),
+        "w_rec": _init_dense(ks[2], d, dr, cfg.pdtype),
+        "conv": (jax.random.normal(ks[3], (cw, dr)) / math.sqrt(cw)).astype(
+            cfg.pdtype
+        ),
+        "w_a": _init_dense(ks[4], dr, dr, cfg.pdtype, scale=0.01),
+        "w_x": _init_dense(ks[5], dr, dr, cfg.pdtype, scale=0.01),
+        "lam": lam.astype(jnp.float32),
+        "w_down": _init_dense(ks[6], dr, d, cfg.pdtype),
+        "norm": jnp.ones((d,), cfg.pdtype),
+    }
+    s = {
+        "w_gate": P(FSDP, TP),
+        "w_rec": P(FSDP, TP),
+        "conv": P(None, TP),
+        "w_a": P(FSDP, TP),
+        "w_x": P(FSDP, TP),
+        "lam": P(None),
+        "w_down": P(TP, FSDP),
+        "norm": P(None),
+    }
+    return p, s
+
+
+RGLRU_CHUNK = 4096  # chunk long sequences: outer lax.scan carries the state,
+# inner associative_scan stays log-depth-bounded (compile + VMEM friendly)
+
+
+def _rglru(p, u, h0):
+    """u: (B,S,dr) f32 inputs; h0: (B,dr) carry. Returns (y, h_last)."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", u, p["w_a"].astype(u.dtype)).astype(
+            jnp.float32
+        )
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", u, p["w_x"].astype(u.dtype)).astype(
+            jnp.float32
+        )
+    )
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r  # (B,S,dr), ≤ 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+    B, S, dr = a.shape
+    if S <= RGLRU_CHUNK:
+        return _rglru_scan(a, gated, h0)
+    nc = -(-S // RGLRU_CHUNK)
+    pad = nc * RGLRU_CHUNK - S
+    if pad:  # pad with identity steps (a=1, b=0) — state passes through
+        a = jnp.concatenate([a, jnp.ones((B, pad, dr), a.dtype)], axis=1)
+        gated = jnp.concatenate(
+            [gated, jnp.zeros((B, pad, dr), gated.dtype)], axis=1
+        )
+    ac = jnp.moveaxis(a.reshape(B, nc, RGLRU_CHUNK, dr), 1, 0)
+    bc = jnp.moveaxis(gated.reshape(B, nc, RGLRU_CHUNK, dr), 1, 0)
+
+    def step(h, xs):
+        a_i, b_i = xs
+        y, h_new = _rglru_scan(a_i, b_i, h)
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(step, h0, (ac, bc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nc * RGLRU_CHUNK, dr)[:, :S]
+    return y, h_last
+
+
+def _rglru_scan(a, gated, h0):
+    """Parallel linear-recurrence solve within one chunk."""
+    # prepend carry as step 0: h_t = a_t h_{t-1} + b_t
+    a_ext = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_ext = jnp.concatenate([h0[:, None], gated], axis=1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+    return h[:, 1:], h[:, -1]
+
+
+def recurrent_block_fwd(p, x, cfg, h0, conv_state=None):
+    """Returns (out, (h_last, new_conv_state)).  conv_state: (B, cw-1, dr)."""
+    cdt = x.dtype
+    cw = cfg.hybrid.conv_width
+    xn = rmsnorm_fwd({"scale": p["norm"]}, x)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,de->bse", xn, p["w_gate"].astype(cdt))
+    )
+    u = jnp.einsum("bsd,de->bse", xn, p["w_rec"].astype(cdt))
+
+    # causal depthwise conv (width cw); carry the last cw-1 inputs in decode
+    if conv_state is None:
+        upad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        upad = jnp.concatenate([conv_state.astype(cdt), u], axis=1)
+    new_conv_state = upad[:, -(cw - 1) :, :] if cw > 1 else None
+    conv = sum(
+        upad[:, i : i + u.shape[1], :] * p["conv"][i].astype(cdt)
+        for i in range(cw)
+    )
+
+    y, h_last = _rglru(p, conv.astype(jnp.float32), h0)
+    out = (y.astype(cdt) * gate)
+    out = jnp.einsum("bse,ed->bsd", out, p["w_down"].astype(cdt))
+    return x + out, (h_last, new_conv_state)
+
+
+# ---------------------------------------------------------------------------
+# Local attention block (MQA, sliding window, ring-buffer decode cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention_block(key, cfg: ArchConfig):
+    ap, as_ = init_attention(
+        key,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.resolved_head_dim,
+        cfg.pdtype,
+    )
+    np_, ns = init_rmsnorm(cfg.d_model, cfg.pdtype)
+    return {"attn": ap, "norm": np_}, {"attn": as_, "norm": ns}
+
+
+def _ring_attention_step(p, x, cfg, cache, offset):
+    """Decode step against a ring-buffer window cache.
+
+    cache: {k,v: (B, W, kv, hd), pos: (B, W) int32 (absolute, -1 = empty)}.
+    """
+    B, S, d = x.shape
+    assert S == 1
+    cdt = x.dtype
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    W = cache["k"].shape[1]
+    positions = jnp.broadcast_to(offset[None, None], (B, 1))
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cdt)).reshape(B, 1, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(cdt)).reshape(B, 1, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(cdt)).reshape(B, 1, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    slot = jnp.mod(offset, W)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+    )
+    cpos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.broadcast_to(offset[None, None], (B, 1)), (0, slot)
+    )
+
+    group = H // KV
+    qg = q.reshape(B, 1, KV, group, hd)
+    logits = jnp.einsum(
+        "bsngh,btnh->bngst", qg, ck.astype(cdt)
+    ) / math.sqrt(hd)
+    logits = logits.astype(jnp.float32)
+    valid = (cpos >= 0) & (cpos <= offset) & (cpos > offset - W)
+    logits = jnp.where(
+        valid[:, None, None, None, :], logits, jnp.finfo(jnp.float32).min
+    )
+    attn = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    out = jnp.einsum("bngst,btnh->bsngh", attn, cv.astype(cdt)).reshape(
+        B, 1, -1
+    )
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def _fill_ring_cache(p, h_norm, cfg, cache):
+    """Populate the ring cache from a parallel pass's last `window` tokens.
+
+    h_norm: (B, S, d) the attention block's normed input; cache slots for
+    absolute positions S-W..S-1 are written (slot = pos % W).
+    """
+    cdt = h_norm.dtype
+    B, S, d = h_norm.shape
+    KV = cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    W = cache["k"].shape[1]
+    Wt = min(W, S)
+    hh = h_norm[:, S - Wt :]
+    positions = jnp.broadcast_to(
+        jnp.arange(S - Wt, S)[None, :], (B, Wt)
+    )
+    k = jnp.einsum("bsd,dh->bsh", hh, p["wk"].astype(cdt)).reshape(
+        B, Wt, KV, hd
+    )
+    v = jnp.einsum("bsd,dh->bsh", hh, p["wv"].astype(cdt)).reshape(
+        B, Wt, KV, hd
+    )
+    k = apply_rope(k, positions, cfg.rope_theta)
+    slots = jnp.mod(jnp.arange(S - Wt, S), W)
+    ck = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+    cpos = cache["pos"].at[:, slots].set(positions)
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def attention_block_fwd(p, x, cfg, cache=None, offset=None, build_cache=False):
+    h = rmsnorm_fwd(p["norm"], x)
+    if cache is None or build_cache:
+        from repro.models.layers import attention_fwd
+
+        out, _ = attention_fwd(
+            p["attn"],
+            h,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            rope_theta=cfg.rope_theta,
+            window=cfg.hybrid.window,
+            impl=cfg.attention_impl,
+        )
+        new_cache = (
+            _fill_ring_cache(p["attn"], h, cfg, cache) if build_cache else None
+        )
+        return x + out, new_cache
+    out, new_cache = _ring_attention_step(p["attn"], h, cfg, cache, offset)
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model: scanned (rec+mlp, rec+mlp, attn+mlp) triples + remainder
+# ---------------------------------------------------------------------------
+
+
+def init_triple(cfg, key):
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    r1, r1s = init_recurrent_block(k1, cfg)
+    r2, r2s = init_recurrent_block(k2, cfg)
+    at, ats = init_attention_block(k3, cfg)
+    mls = [init_mlp(k, cfg.d_model, cfg.d_ff, cfg.pdtype) for k in (k4, k5, k6)]
+    nrm = [init_rmsnorm(cfg.d_model, cfg.pdtype) for _ in range(3)]
+    p = {
+        "rec1": r1,
+        "rec2": r2,
+        "attn": at,
+        "mlp1": mls[0][0],
+        "mlp2": mls[1][0],
+        "mlp3": mls[2][0],
+        "mnorm1": nrm[0][0],
+        "mnorm2": nrm[1][0],
+        "mnorm3": nrm[2][0],
+    }
+    s = {
+        "rec1": r1s,
+        "rec2": r2s,
+        "attn": ats,
+        "mlp1": mls[0][1],
+        "mlp2": mls[1][1],
+        "mlp3": mls[2][1],
+        "mnorm1": nrm[0][1],
+        "mnorm2": nrm[1][1],
+        "mnorm3": nrm[2][1],
+    }
+    return p, s
+
+
+def _n_triples(cfg):
+    return cfg.n_layers // len(cfg.hybrid.pattern)
+
+
+def init_params(cfg: ArchConfig, key):
+    nt = _n_triples(cfg)
+    rem = cfg.n_layers - nt * len(cfg.hybrid.pattern)
+    keys = jax.random.split(key, nt + rem + 1)
+    emb_p, emb_s = init_embedding(keys[0], cfg.vocab, cfg.d_model, cfg.pdtype)
+    triples = jax.vmap(lambda k: init_triple(cfg, k)[0])(keys[1 : nt + 1])
+    _, t_spec = init_triple(cfg, keys[1])
+    params = {"embed": emb_p, "triples": triples}
+    specs = {"embed": emb_s, "triples": stacked(t_spec)}
+    # remainder layers are recurrent blocks (+ MLP), unrolled
+    for i in range(rem):
+        kk = keys[nt + 1 + i]
+        k1, k2 = jax.random.split(kk)
+        rp, rs = init_recurrent_block(k1, cfg)
+        mp, ms = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.pdtype)
+        nrm_p, nrm_s = init_rmsnorm(cfg.d_model, cfg.pdtype)
+        params[f"rem{i}"] = {"rec": rp, "mlp": mp, "mnorm": nrm_p}
+        specs[f"rem{i}"] = {"rec": rs, "mlp": ms, "mnorm": nrm_s}
+    fn_p, fn_s = init_rmsnorm(cfg.d_model, cfg.pdtype)
+    params["final_norm"] = fn_p
+    specs["final_norm"] = fn_s
+    return params, specs
+
+
+def _mlp_res(cfg, norm_p, mlp_p, x):
+    return x + mlp_fwd(mlp_p, rmsnorm_fwd(norm_p, x), "gelu")
+
+
+def _triple_fwd(cfg, tp, x, state, decode=False, offset=None, build_cache=False):
+    h1, c1, h2, c2, attn_cache = state
+    x, (h1, c1) = recurrent_block_fwd(tp["rec1"], x, cfg, h1, c1 if decode else None)
+    x = _mlp_res(cfg, tp["mnorm1"], tp["mlp1"], x)
+    x, (h2, c2) = recurrent_block_fwd(tp["rec2"], x, cfg, h2, c2 if decode else None)
+    x = _mlp_res(cfg, tp["mnorm2"], tp["mlp2"], x)
+    x, new_cache = attention_block_fwd(
+        tp["attn"],
+        x,
+        cfg,
+        attn_cache if (decode or build_cache) else None,
+        offset,
+        build_cache=build_cache,
+    )
+    if new_cache is not None:
+        attn_cache = new_cache
+    x = _mlp_res(cfg, tp["mnorm3"], tp["mlp3"], x)
+    return x, (h1, c1, h2, c2, attn_cache)
+
+
+def init_state(cfg: ArchConfig, batch: int, max_len: int):
+    nt = _n_triples(cfg)
+    rem = cfg.n_layers - nt * len(cfg.hybrid.pattern)
+    dr = cfg.hybrid.lru_dim or cfg.d_model
+    cw = cfg.hybrid.conv_width
+    W = min(max_len, cfg.hybrid.window)
+    hd = cfg.resolved_head_dim
+
+    def rec_state():
+        return (
+            jnp.zeros((nt, batch, dr), jnp.float32),
+            jnp.zeros((nt, batch, cw - 1, dr), cfg.cdtype),
+        )
+
+    h1, c1 = rec_state()
+    h2, c2 = rec_state()
+    attn = {
+        "k": jnp.zeros((nt, batch, W, cfg.n_kv_heads, hd), cfg.cdtype),
+        "v": jnp.zeros((nt, batch, W, cfg.n_kv_heads, hd), cfg.cdtype),
+        "pos": jnp.full((nt, batch, W), -1, jnp.int32),
+    }
+    rem_state = [
+        (
+            jnp.zeros((batch, dr), jnp.float32),
+            jnp.zeros((batch, cw - 1, dr), cfg.cdtype),
+        )
+        for _ in range(rem)
+    ]
+    state = {"triples": (h1, c1, h2, c2, attn), "rem": rem_state}
+    spec = jax.tree.map(lambda a: P(None, "data"), state)
+    return state, spec
+
+
+def _run(cfg, params, x, state, decode, offset, build_cache=False):
+    h1, c1, h2, c2, attn = state["triples"]
+
+    def step(carry, xs):
+        h, off = carry
+        tp, st = xs
+        h, st = _triple_fwd(cfg, tp, h, st, decode, off, build_cache)
+        return (h, off), st
+
+    step_fn = step
+    if cfg.remat and not decode:
+        step_fn = jax.checkpoint(
+            step, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    (x, _), new_triple_state = jax.lax.scan(
+        step_fn, (x, offset), (params["triples"], (h1, c1, h2, c2, attn))
+    )
+    new_rem = []
+    i = 0
+    while f"rem{i}" in params:
+        rp = params[f"rem{i}"]
+        h0, cs = state["rem"][i]
+        x, (h0, cs) = recurrent_block_fwd(
+            rp["rec"], x, cfg, h0, cs if decode else None
+        )
+        x = _mlp_res(cfg, rp["mnorm"], rp["mlp"], x)
+        new_rem.append((h0, cs))
+        i += 1
+    return x, {"triples": new_triple_state, "rem": new_rem}
+
+
+def forward(cfg: ArchConfig, params, tokens):
+    B, S = tokens.shape
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    x = constrain(x, "data", None, None)
+    state, _ = init_state(cfg, B, max_len=1)
+    x, _ = _run(cfg, params, x, state, decode=False, offset=jnp.int32(0))
+    x = rmsnorm_fwd(params["final_norm"], x)
+    return constrain(unembed_fwd(params["embed"], x), "data", None, "model")
+
+
+def prefill(cfg: ArchConfig, params, tokens, max_len):
+    """Parallel prefill: one full forward pass that also materializes the
+    decode state — recurrent carries + conv tails fall out of the parallel
+    blocks, and the attention ring caches are filled from the last
+    ``window`` positions (everything older is out-of-window by
+    construction)."""
+    B, S = tokens.shape
+    state, _ = init_state(cfg, B, max_len)
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    x, state = _run(
+        cfg,
+        params,
+        x,
+        state,
+        decode=False,
+        offset=jnp.int32(0),
+        build_cache=True,
+    )
+    logits = rmsnorm_fwd(params["final_norm"], x[:, -1:])
+    return unembed_fwd(params["embed"], logits), state
+
+
+def decode_step(cfg: ArchConfig, params, state, tokens, offset):
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    offset = jnp.asarray(offset, jnp.int32)
+    x, state = _run(cfg, params, x, state, decode=True, offset=offset)
+    x = rmsnorm_fwd(params["final_norm"], x)
+    return unembed_fwd(params["embed"], x), state
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return init_state(cfg, batch, max_len)

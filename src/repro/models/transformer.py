@@ -1,0 +1,223 @@
+"""Dense decoder-only transformer (starcoder2 / yi / granite / command-r).
+
+Layers are parameter-stacked and driven by ``lax.scan`` (fast compiles for
+60+ layer configs) with optional per-layer remat.  The same block is reused
+by the VLM backbone (patch embeddings prepended) and — with window masks —
+by the hybrid model's attention layers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, stacked
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    FSDP,
+    TP,
+    attention_fwd,
+    embed_fwd,
+    init_attention,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    layernorm_fwd,
+    init_layernorm,
+    mlp_fwd,
+    rmsnorm_fwd,
+    unembed_fwd,
+)
+
+
+def _init_norm(cfg, d, dtype):
+    return (
+        init_rmsnorm(d, dtype)
+        if cfg.norm == "rmsnorm"
+        else init_layernorm(d, dtype)
+    )
+
+
+def _norm_fwd(cfg, p, x):
+    return rmsnorm_fwd(p, x) if cfg.norm == "rmsnorm" else layernorm_fwd(p, x)
+
+
+def init_layer(cfg: ArchConfig, key):
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_s = init_attention(
+        k1,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.resolved_head_dim,
+        cfg.pdtype,
+        bias=cfg.attn_bias,
+    )
+    mlp_p, mlp_s = init_mlp(
+        k2,
+        cfg.d_model,
+        cfg.d_ff,
+        cfg.pdtype,
+        gated=(cfg.activation == "silu"),
+        bias=cfg.mlp_bias,
+    )
+    n1_p, n1_s = _init_norm(cfg, cfg.d_model, cfg.pdtype)
+    n2_p, n2_s = _init_norm(cfg, cfg.d_model, cfg.pdtype)
+    return (
+        {"attn": attn_p, "mlp": mlp_p, "norm1": n1_p, "norm2": n2_p},
+        {"attn": attn_s, "mlp": mlp_s, "norm1": n1_s, "norm2": n2_s},
+    )
+
+
+def layer_fwd(
+    cfg: ArchConfig, lp, x, *, kv_cache=None, cache_offset=None, window=None
+):
+    h = _norm_fwd(cfg, lp["norm1"], x)
+    h = constrain(h, "data", None, None)
+    attn_out, new_cache = attention_fwd(
+        lp["attn"],
+        h,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        rope_theta=cfg.rope_theta,
+        use_rope=cfg.use_rope,
+        window=window,
+        kv_cache=kv_cache,
+        cache_offset=cache_offset,
+        impl=cfg.attention_impl,
+    )
+    x = x + attn_out
+    h = _norm_fwd(cfg, lp["norm2"], x)
+    x = x + mlp_fwd(lp["mlp"], h, cfg.activation)
+    x = constrain(x, "data", None, None)
+    return x, new_cache
+
+
+def init_params(cfg: ArchConfig, key):
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    emb_p, emb_s = init_embedding(keys[0], cfg.vocab, cfg.d_model, cfg.pdtype)
+    layer_keys = jnp.stack(list(keys[1:]))
+    stacked_layers = jax.vmap(lambda k: init_layer(cfg, k)[0])(layer_keys)
+    _, layer_spec = init_layer(cfg, keys[1])
+    fn_p, fn_s = _init_norm(cfg, cfg.d_model, cfg.pdtype)
+    params = {"embed": emb_p, "layers": stacked_layers, "final_norm": fn_p}
+    specs = {
+        "embed": emb_s,
+        "layers": stacked(layer_spec),
+        "final_norm": fn_s,
+    }
+    return params, specs
+
+
+def _scan_layers(cfg: ArchConfig, step_fn, x, stacked_params, *extra_xs):
+    if cfg.remat:
+        step_fn = jax.checkpoint(
+            step_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    if cfg.scan_layers:
+        return jax.lax.scan(step_fn, x, (stacked_params, *extra_xs))
+    carry, ys = x, []
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], stacked_params)
+        ex = tuple(jax.tree.map(lambda a: a[i], e) for e in extra_xs)
+        carry, y = step_fn(carry, (sl, *ex))
+        ys.append(y)
+    ys = (
+        None
+        if all(y is None for y in ys)
+        else jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    )
+    return carry, ys
+
+
+def forward(cfg: ArchConfig, params, tokens, patch_embeds=None):
+    """Training/prefill forward: tokens (B, S) -> logits (B, S', vocab).
+
+    ``patch_embeds`` (VLM stub): (B, N_patch, d) embeddings prepended to the
+    token embeddings; logits returned only for the token positions.
+    """
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    n_patch = 0
+    if patch_embeds is not None:
+        n_patch = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(cfg.cdtype), x], axis=1)
+    x = constrain(x, "data", None, None)
+
+    def step(h, xs):
+        (lp,) = xs
+        h, _ = layer_fwd(cfg, lp, h)
+        return h, None
+
+    x, _ = _scan_layers(cfg, step, x, params["layers"])
+    x = _norm_fwd(cfg, params["final_norm"], x)
+    logits = unembed_fwd(params["embed"], x)
+    if n_patch:
+        logits = logits[:, n_patch:]
+    return constrain(logits, "data", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Serving: KV cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    cache = {
+        "k": jnp.zeros(shape, cfg.cdtype),
+        "v": jnp.zeros(shape, cfg.cdtype),
+    }
+    spec = {
+        "k": P(None, "data", None, "model", None),
+        "v": P(None, "data", None, "model", None),
+    }
+    return cache, spec
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, offset):
+    """One decode step: tokens (B, 1) + cache at ``offset`` -> logits, cache."""
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+
+    def step(h, xs):
+        lp, ck, cv = xs
+        h, new_kv = layer_fwd(
+            cfg, lp, h, kv_cache=(ck, cv), cache_offset=offset
+        )
+        return h, new_kv
+
+    x, new_kv = _scan_layers(
+        cfg, step, x, params["layers"], cache["k"], cache["v"]
+    )
+    new_cache = {"k": new_kv[0], "v": new_kv[1]}
+    x = _norm_fwd(cfg, params["final_norm"], x)
+    logits = unembed_fwd(params["embed"], x)
+    return constrain(logits, "data", None, "model"), new_cache
+
+
+def prefill(cfg: ArchConfig, params, tokens, max_len, patch_embeds=None):
+    """Prefill: run the full prompt, building the cache; returns logits of
+    the last position + filled cache.  VLM: patch embeddings occupy the
+    first ``num_patch_tokens`` cache slots — decode offsets are absolute
+    cache positions (n_patch + tokens seen)."""
+    B, S = tokens.shape
+    cache, _ = init_kv_cache(cfg, B, max_len)
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(cfg.cdtype), x], axis=1)
+
+    def step(h, xs):
+        lp, ck, cv = xs
+        h, new_kv = layer_fwd(cfg, lp, h, kv_cache=(ck, cv), cache_offset=0)
+        return h, new_kv
+
+    x, new_kv = _scan_layers(
+        cfg, step, x, params["layers"], cache["k"], cache["v"]
+    )
+    x = _norm_fwd(cfg, params["final_norm"], x[:, -1:, :])
+    logits = unembed_fwd(params["embed"], x)
+    return logits, {"k": new_kv[0], "v": new_kv[1]}

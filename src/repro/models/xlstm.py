@@ -1,0 +1,429 @@
+"""xLSTM (sLSTM + mLSTM) blocks — the [ssm] architecture (xlstm-350m).
+
+Layers alternate mLSTM / sLSTM blocks (scanned as pairs).  d_ff = 0 per the
+assigned table: blocks carry only their internal projections, no extra MLP.
+
+* mLSTM: matrix memory C ∈ R^{hd×hd} per head with exponential input gating
+  and a log-space stabilizer.  Training/prefill run the **chunkwise-parallel
+  form** (MXU-friendly: intra-chunk attention-like einsums + inter-chunk
+  recurrent state), decode runs the O(1) recurrent step.  The step-recurrent
+  form is the test oracle for the chunkwise math.
+* sLSTM: scalar memory with head-block-diagonal recurrent mixing — inherently
+  sequential, implemented with ``lax.scan`` over time; O(1) decode step.
+
+`long_500k` runs on this family: decode state is O(1) in sequence length.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, stacked
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    FSDP,
+    TP,
+    _init_dense,
+    embed_fwd,
+    init_embedding,
+    init_rmsnorm,
+    rmsnorm_fwd,
+    unembed_fwd,
+)
+
+CHUNK = 128  # chunkwise-parallel block length
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key, cfg: ArchConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_up": _init_dense(ks[0], d, 2 * d, cfg.pdtype),
+        "w_q": _init_dense(ks[1], d, d, cfg.pdtype),
+        "w_k": _init_dense(ks[2], d, d, cfg.pdtype),
+        "w_v": _init_dense(ks[3], d, d, cfg.pdtype),
+        "w_i": _init_dense(ks[4], d, H, cfg.pdtype, scale=0.01),
+        "w_f": _init_dense(ks[5], d, H, cfg.pdtype, scale=0.01),
+        "b_i": jnp.zeros((H,), cfg.pdtype),
+        "b_f": jnp.full((H,), 3.0, cfg.pdtype),  # open forget gates at init
+        "w_down": _init_dense(ks[6], d, d, cfg.pdtype),
+        "norm": jnp.ones((d,), cfg.pdtype),
+    }
+    s = {
+        "w_up": P(FSDP, TP),
+        "w_q": P(FSDP, TP),
+        "w_k": P(FSDP, TP),
+        "w_v": P(FSDP, TP),
+        "w_i": P(FSDP, None),
+        "w_f": P(FSDP, None),
+        "b_i": P(None),
+        "b_f": P(None),
+        "w_down": P(TP, FSDP),
+        "norm": P(None),
+    }
+    return p, s
+
+
+def _mlstm_gates(p, xin, H):
+    """log input gate (pre-stabilizer) and log forget gate, (B,S,H) f32."""
+    i_pre = jnp.einsum("bsd,dh->bsh", xin, p["w_i"].astype(xin.dtype)) + p[
+        "b_i"
+    ].astype(xin.dtype)
+    f_pre = jnp.einsum("bsd,dh->bsh", xin, p["w_f"].astype(xin.dtype)) + p[
+        "b_f"
+    ].astype(xin.dtype)
+    log_i = i_pre.astype(jnp.float32)  # exponential input gate: log i = ĩ
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    return log_i, log_f
+
+
+def _mlstm_qkv(p, xin, H):
+    B, S, d = xin.shape
+    hd = d // H
+    q = jnp.einsum("bsd,de->bse", xin, p["w_q"].astype(xin.dtype))
+    k = jnp.einsum("bsd,de->bse", xin, p["w_k"].astype(xin.dtype))
+    v = jnp.einsum("bsd,de->bse", xin, p["w_v"].astype(xin.dtype))
+    shp = (B, S, H, hd)
+    return (
+        q.reshape(shp).astype(jnp.float32),
+        k.reshape(shp).astype(jnp.float32) / math.sqrt(hd),
+        v.reshape(shp).astype(jnp.float32),
+    )
+
+
+def mlstm_recurrent_step(q, k, v, log_i, log_f, state):
+    """One-token recurrent update. q/k/v: (B,H,hd); gates (B,H); state
+    (C,n,m) with C:(B,H,hd,hd), n:(B,H,hd), m:(B,H). Returns (h, state)."""
+    C, n, m = state
+    m_new = jnp.maximum(log_f + m, log_i)
+    a = jnp.exp(log_f + m - m_new)[..., None]
+    b = jnp.exp(log_i - m_new)[..., None]
+    C = a[..., None] * C + (b * k)[..., None] * v[..., None, :]
+    n = a * n + b * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new)
+    )[..., None]
+    return num / den, (C, n, m_new)
+
+
+def mlstm_recurrent(q, k, v, log_i, log_f, state):
+    """Oracle: scan the one-step recurrence over time. q: (B,S,H,hd)."""
+
+    def step(st, xs):
+        qt, kt, vt, lit, lft = xs
+        h, st = mlstm_recurrent_step(qt, kt, vt, lit, lft, st)
+        return st, h
+
+    xs = jax.tree.map(
+        lambda a: jnp.moveaxis(a, 1, 0), (q, k, v, log_i, log_f)
+    )
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state):
+    """Chunkwise-parallel mLSTM (training/prefill path).
+
+    Splits S into chunks of ``CHUNK``; scan carries (C, n, m) across chunks;
+    intra-chunk work is parallel einsums.  Matches ``mlstm_recurrent``.
+    """
+    B, S, H, hd = q.shape
+    L = CHUNK
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    def chunk(a):
+        return jnp.moveaxis(
+            a.reshape(B, nc, L, *a.shape[2:]), 1, 0
+        )  # (nc, B, L, ...)
+
+    qc, kc, vc, lic, lfc = map(chunk, (q, k, v, log_i, log_f))
+
+    def step(st, xs):
+        C, n, m = st
+        qt, kt, vt, li, lf = xs  # (B, L, H, ...)
+        b = jnp.cumsum(lf, axis=1)  # (B,L,H) cumulative log-forget
+        # running stabilizer: m_t = max(m_prev + b_t, max_{s<=t}(b_t - b_s + li_s))
+        m_t = jnp.maximum(m[:, None] + b, b + jax.lax.cummax(li - b, axis=1))
+        # inter-chunk term
+        inter_scale = jnp.exp(m[:, None] + b - m_t)  # (B,L,H)
+        num_inter = jnp.einsum("blhd,bhde->blhe", qt, C) * inter_scale[..., None]
+        den_inter = jnp.einsum("blhd,bhd->blh", qt, n) * inter_scale
+        # intra-chunk term: weight(t,s) = exp(b_t - b_s + li_s - m_t), s<=t
+        w = b[:, :, None, :] - b[:, None, :, :] + li[:, None, :, :] - m_t[
+            :, :, None, :
+        ]  # (B,L,L,H)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(causal[None, :, :, None], jnp.exp(w), 0.0)
+        scores = jnp.einsum("blhd,bshd->blsh", qt, kt) * w
+        num_intra = jnp.einsum("blsh,bshe->blhe", scores, vt)
+        den_intra = jnp.sum(scores, axis=2)  # (B,L,H)
+        den = jnp.maximum(
+            jnp.abs(den_inter + den_intra), jnp.exp(-m_t)
+        )
+        h = (num_inter + num_intra) / den[..., None]
+        # state to next chunk
+        bL = b[:, -1]  # (B,H)
+        m_new = jnp.maximum(m + bL, jnp.max(li - b + bL[:, None], axis=1))
+        carry_scale = jnp.exp(m + bL - m_new)  # (B,H)
+        kv_w = jnp.exp(bL[:, None] - b + li - m_new[:, None])  # (B,L,H)
+        C_new = carry_scale[..., None, None] * C + jnp.einsum(
+            "blhd,blhe,blh->bhde", kt, vt, kv_w
+        )
+        n_new = carry_scale[..., None] * n + jnp.einsum(
+            "blhd,blh->bhd", kt, kv_w
+        )
+        return (C_new, n_new, m_new), h
+
+    state, hs = jax.lax.scan(step, state, (qc, kc, vc, lic, lfc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)
+    return h, state
+
+
+def init_mlstm_state(cfg, batch):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return (
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, H, hd), jnp.float32),
+        jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def mlstm_block_fwd(p, x, cfg, state, *, step_mode=False):
+    cdt = x.dtype
+    h = rmsnorm_fwd({"scale": p["norm"]}, x)
+    up = jnp.einsum("bsd,de->bse", h, p["w_up"].astype(cdt))
+    xin, gate = jnp.split(up, 2, axis=-1)
+    H = cfg.n_heads
+    q, k, v = _mlstm_qkv(p, xin, H)
+    log_i, log_f = _mlstm_gates(p, xin, H)
+    if step_mode:
+        out, state = mlstm_recurrent_step(
+            q[:, 0], k[:, 0], v[:, 0], log_i[:, 0], log_f[:, 0], state
+        )
+        out = out[:, None]
+    else:
+        out, state = mlstm_chunkwise(q, k, v, log_i, log_f, state)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, -1).astype(cdt) * jax.nn.silu(gate)
+    out = jnp.einsum("bse,ed->bsd", out, p["w_down"].astype(cdt))
+    return x + out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_block(key, cfg: ArchConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_x": _init_dense(ks[0], d, 4 * d, cfg.pdtype),  # i,f,z,o pre-acts
+        "r": (jax.random.normal(ks[1], (H, hd, 4 * hd)) / math.sqrt(hd)).astype(
+            cfg.pdtype
+        ),  # block-diagonal recurrent mixing
+        "b": jnp.concatenate(
+            [
+                jnp.zeros((d,)),
+                jnp.full((d,), 3.0),
+                jnp.zeros((2 * d,)),
+            ]
+        ).astype(cfg.pdtype),
+        "w_down": _init_dense(ks[2], d, d, cfg.pdtype),
+        "norm": jnp.ones((d,), cfg.pdtype),
+    }
+    s = {
+        "w_x": P(FSDP, TP),
+        "r": P(TP, None, None),
+        "b": P(None),
+        "w_down": P(TP, FSDP),
+        "norm": P(None),
+    }
+    return p, s
+
+
+def init_slstm_state(cfg, batch):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return (z(), z(), jnp.full((batch, H, hd), -1e30, jnp.float32), z())
+
+
+def slstm_step(pre_x, r, b, state, H, hd):
+    """pre_x: (B, 4d) token pre-activations; state (c,n,m,h)."""
+    c, n, m, h = state
+    B = pre_x.shape[0]
+    rec = jnp.einsum("bhd,hde->bhe", h, r.astype(jnp.float32))  # (B,H,4hd)
+    pre = pre_x.reshape(B, 4, H, hd).astype(jnp.float32) + jnp.moveaxis(
+        rec.reshape(B, H, 4, hd), 2, 1
+    ) + b.reshape(4, H, hd)[None]
+    i_p, f_p, z_p, o_p = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    log_i = i_p
+    log_f = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(log_f + m, log_i)
+    a = jnp.exp(log_f + m - m_new)
+    bb = jnp.exp(log_i - m_new)
+    c = a * c + bb * jnp.tanh(z_p)
+    n = a * n + bb
+    h_new = jax.nn.sigmoid(o_p) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h_new)
+
+
+def slstm_block_fwd(p, x, cfg, state, *, step_mode=False):
+    cdt = x.dtype
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    hn = rmsnorm_fwd({"scale": p["norm"]}, x)
+    pre = jnp.einsum("bsd,de->bse", hn, p["w_x"].astype(cdt))  # (B,S,4d)
+
+    if step_mode:
+        state = slstm_step(pre[:, 0], p["r"], p["b"], state, H, hd)
+        hs = state[3][:, None]  # (B,1,H,hd)
+    else:
+
+        def step(st, pre_t):
+            st = slstm_step(pre_t, p["r"], p["b"], st, H, hd)
+            return st, st[3]
+
+        state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)  # (B,S,H,hd)
+
+    out = hs.reshape(B, -1, d).astype(cdt)
+    out = jnp.einsum("bse,ed->bsd", out, p["w_down"].astype(cdt))
+    return x + out, state
+
+
+# ---------------------------------------------------------------------------
+# Full model: alternating (mLSTM, sLSTM) pairs, scanned
+# ---------------------------------------------------------------------------
+
+
+def init_pair(cfg, key):
+    k1, k2 = jax.random.split(key)
+    mp, ms = init_mlstm_block(k1, cfg)
+    sp, ss = init_slstm_block(k2, cfg)
+    return {"m": mp, "s": sp}, {"m": ms, "s": ss}
+
+
+def init_params(cfg: ArchConfig, key):
+    assert cfg.n_layers % 2 == 0, "xLSTM config uses (mLSTM, sLSTM) pairs"
+    n_pairs = cfg.n_layers // 2
+    keys = jax.random.split(key, n_pairs + 1)
+    emb_p, emb_s = init_embedding(keys[0], cfg.vocab, cfg.d_model, cfg.pdtype)
+    pairs = jax.vmap(lambda k: init_pair(cfg, k)[0])(keys[1:])
+    _, pair_spec = init_pair(cfg, keys[1])
+    fn_p, fn_s = init_rmsnorm(cfg.d_model, cfg.pdtype)
+    return (
+        {"embed": emb_p, "pairs": pairs, "final_norm": fn_p},
+        {"embed": emb_s, "pairs": stacked(pair_spec), "final_norm": fn_s},
+    )
+
+
+def init_state(cfg: ArchConfig, batch: int):
+    n_pairs = cfg.n_layers // 2
+    rep = lambda t: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_pairs, *a.shape)), t
+    )
+    state = {
+        "m": rep(init_mlstm_state(cfg, batch)),
+        "s": rep(init_slstm_state(cfg, batch)),
+    }
+    spec = jax.tree.map(lambda _: P(None, "data"), state)
+    return state, spec
+
+
+def _run(cfg, params, x, state, step_mode):
+    def pair_step(h, xs):
+        lp, mst, sst = xs
+        h, mst = mlstm_block_fwd(lp["m"], h, cfg, mst, step_mode=step_mode)
+        h, sst = slstm_block_fwd(lp["s"], h, cfg, sst, step_mode=step_mode)
+        return h, (mst, sst)
+
+    if cfg.remat and not step_mode:
+        pair_step = jax.checkpoint(
+            pair_step, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    if cfg.scan_layers:
+        x, (mst, sst) = jax.lax.scan(
+            pair_step, x, (params["pairs"], state["m"], state["s"])
+        )
+    else:
+        n = jax.tree.leaves(params["pairs"])[0].shape[0]
+        msts, ssts = [], []
+        for i in range(n):
+            sl = jax.tree.map(lambda a: a[i], params["pairs"])
+            mst_i = jax.tree.map(lambda a: a[i], state["m"])
+            sst_i = jax.tree.map(lambda a: a[i], state["s"])
+            x, (mst_i, sst_i) = pair_step(x, (sl, mst_i, sst_i))
+            msts.append(mst_i)
+            ssts.append(sst_i)
+        mst = jax.tree.map(lambda *a: jnp.stack(a), *msts)
+        sst = jax.tree.map(lambda *a: jnp.stack(a), *ssts)
+    return x, {"m": mst, "s": sst}
+
+
+def forward(cfg: ArchConfig, params, tokens):
+    B, S = tokens.shape
+    pad = (-S) % CHUNK
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    x = constrain(x, "data", None, None)
+    state, _ = init_state(cfg, B)
+    x, _ = _run(cfg, params, x, state, step_mode=False)
+    x = rmsnorm_fwd(params["final_norm"], x[:, :S])
+    return constrain(unembed_fwd(params["embed"], x), "data", None, "model")
+
+
+def prefill(cfg: ArchConfig, params, tokens, max_len=None):
+    B, S = tokens.shape
+    pad = (-S) % CHUNK
+    ptoks = jnp.pad(tokens, ((0, 0), (0, pad))) if pad else tokens
+    x = embed_fwd(params["embed"], ptoks, cfg.cdtype)
+    state, _ = init_state(cfg, B)
+    if pad:
+        # run the aligned prefix chunkwise, the ragged tail step-by-step
+        # (exactness beats elegance here; pad tokens would corrupt state)
+        aligned = S - (S % CHUNK)
+        if aligned:
+            xa, state = _run(
+                cfg, params, x[:, :aligned], state, step_mode=False
+            )
+        outs = [xa[:, -1:]] if aligned else []
+        for t in range(aligned, S):
+            xt, state = _run(cfg, params, x[:, t : t + 1], state, True)
+            outs.append(xt)
+        x_last = outs[-1]
+    else:
+        xf, state = _run(cfg, params, x, state, step_mode=False)
+        x_last = xf[:, -1:]
+    x_last = rmsnorm_fwd(params["final_norm"], x_last)
+    logits = unembed_fwd(params["embed"], x_last)
+    return logits, state
+
+
+def decode_step(cfg: ArchConfig, params, state, tokens, offset=None):
+    x = embed_fwd(params["embed"], tokens, cfg.cdtype)
+    x, state = _run(cfg, params, x, state, step_mode=True)
+    x = rmsnorm_fwd(params["final_norm"], x)
+    return unembed_fwd(params["embed"], x), state
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Recurrent state plays the role of the KV cache (O(1) in max_len)."""
+    return init_state(cfg, batch)

@@ -1,0 +1,90 @@
+"""AdamW with ZeRO-sharded state (+ optional bf16 moments for 1T-class
+configs) and an optional signSGD-majority mode that consumes the Flash-Cosmos
+sign-compression kernels' output."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"  # "bfloat16" halves optimizer memory
+    mode: str = "adamw"  # or "signsgd" (majority-voted sign updates)
+
+
+def init_opt_state(params: Any, cfg: OptimizerConfig) -> Any:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs: Any) -> Any:
+    """Optimizer moments shard exactly like their parameters (ZeRO)."""
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        "mu": param_specs,
+        "nu": param_specs,
+        "step": P(),
+    }
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw_update(params, grads, state, cfg: OptimizerConfig):
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g32
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        mu_hat = mu32 / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu32 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - cfg.lr * (delta + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), mu32.astype(sdt), nu32.astype(sdt)
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    new_mu = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    new_nu = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+def signsgd_update(params, sign_grads, state, cfg: OptimizerConfig):
+    """signSGD with majority vote: ``sign_grads`` are ±1 (already voted
+    across the data axis via the packed bitwise majority kernel)."""
+    step = state["step"] + 1
+
+    def upd(p, s):
+        p32 = p.astype(jnp.float32)
+        return (p32 - cfg.lr * (s + cfg.weight_decay * p32)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, sign_grads)
+    return new_params, {"mu": state["mu"], "nu": state["nu"], "step": step}

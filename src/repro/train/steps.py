@@ -1,0 +1,72 @@
+"""Train / prefill / decode step factories, generic over architecture.
+
+Each factory returns a pure function suitable for ``jax.jit`` with explicit
+in/out shardings, used by the trainer, the serving engine, and the dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.registry import get_model
+from repro.train.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    clip_by_global_norm,
+)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy; logits (B,S,V) f32, labels (B,S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    model = get_model(cfg)
+
+    def loss_fn(params, batch):
+        logits = model.forward(cfg, params, **batch["inputs"])
+        labels = batch["labels"]
+        # next-token shift happens in the data pipeline; labels align to
+        # logits positions directly.
+        return softmax_xent(logits, labels)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        new_params, new_state = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int) -> Callable:
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(cfg, params, max_len=max_len, **batch["inputs"])
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    model = get_model(cfg)
+
+    def decode_step(params, cache, tokens, offset):
+        return model.decode_step(cfg, params, cache, tokens, offset)
+
+    return decode_step

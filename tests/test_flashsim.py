@@ -1,0 +1,230 @@
+"""FlashSim: timing/power anchors and platform-model invariants."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.flashsim import (
+    DEFAULT_SSD,
+    Platform,
+    bmi_workload,
+    ims_workload,
+    inter_block_tmws_ratio,
+    intra_block_tmws_ratio,
+    kcs_workload,
+    mws_power_ratio,
+    run_workload,
+)
+from repro.flashsim.geometry import FIG7_SSD
+from repro.flashsim.platforms import fig7_timeline
+from repro.flashsim.timing import ERASE_POWER_RATIO, mws_energy_j
+
+
+# ---------------------------------------------------------------------------
+# §5.2 measurement anchors
+# ---------------------------------------------------------------------------
+
+
+def test_intra_block_anchors():
+    assert intra_block_tmws_ratio(1) == pytest.approx(1.0)
+    assert intra_block_tmws_ratio(8) <= 1.01  # "< 1% for ≤ 8 WLs"
+    assert intra_block_tmws_ratio(48) == pytest.approx(1.033)  # "+3.3%"
+
+
+def test_inter_block_anchors():
+    assert inter_block_tmws_ratio(1) == pytest.approx(1.0)
+    assert inter_block_tmws_ratio(4) == pytest.approx(1.033)
+    assert inter_block_tmws_ratio(32) == pytest.approx(1.363)  # "+36.3%"
+    # far below 32 serial reads
+    assert inter_block_tmws_ratio(32) < 32
+
+
+def test_power_anchors():
+    assert mws_power_ratio(1) == pytest.approx(1.0)
+    assert mws_power_ratio(2) == pytest.approx(1.34)  # "+34%"
+    assert mws_power_ratio(4) == pytest.approx(1.80)  # "about 80%"
+    assert mws_power_ratio(4) < ERASE_POWER_RATIO + 0.001  # below erase power
+
+
+def test_intra_mws_cheaper_than_read():
+    """§4.1: intra-block MWS power is *lower* than a regular read."""
+    assert mws_power_ratio(1, n_wls_intra=48) < 1.0
+
+
+def test_four_block_mws_energy_saving():
+    """§5.2: 4-block MWS ≈ 53% less energy than 4 individual reads."""
+    ssd = DEFAULT_SSD
+    e_mws = mws_energy_j(ssd.t_r_us, ssd.p_read_w, 4, 1)
+    e_serial = 4 * ssd.e_sense_page
+    saving = 1 - e_mws / e_serial
+    assert saving == pytest.approx(0.53, abs=0.03)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 64))
+def test_tmws_monotone(n):
+    assert inter_block_tmws_ratio(n + 1) >= inter_block_tmws_ratio(n)
+    assert intra_block_tmws_ratio(min(n + 1, 48)) >= intra_block_tmws_ratio(
+        min(n, 48)
+    )
+    assert mws_power_ratio(n + 1) >= mws_power_ratio(n)
+
+
+# ---------------------------------------------------------------------------
+# Workload construction (FC command counts come from the real planner)
+# ---------------------------------------------------------------------------
+
+
+def test_bmi_operand_counts():
+    assert bmi_workload(1).num_operands == 30  # paper: 30 … 1095
+    assert bmi_workload(36).num_operands == 1095
+
+
+def test_bmi_fc_commands_are_ceil_d_over_48():
+    for m in (1, 12, 36):
+        wl = bmi_workload(m)
+        assert wl.fc_sensing_ops == -(-wl.num_operands // 48)
+
+
+def test_ims_single_command():
+    assert ims_workload(10_000).fc_sensing_ops == 1
+
+
+def test_kcs_single_command_upto_48():
+    """AND of ≤48 adjacency vectors + OR with the clique vector in ONE
+    inter-block MWS (paper §7: 'both ops simultaneously')."""
+    for k in (8, 16, 32, 48):
+        wl = kcs_workload(k)
+        assert wl.fc_sensing_ops == 1, k
+        assert wl.fc_commands[0].n_blocks == 2
+
+
+def test_kcs_large_k_chains_without_spill():
+    wl = kcs_workload(64)
+    assert wl.fc_sensing_ops == 3  # 2-cmd AND chain + clique OR
+
+
+# ---------------------------------------------------------------------------
+# Platform model invariants + headline reproduction bands
+# ---------------------------------------------------------------------------
+
+WORKLOADS = (
+    [bmi_workload(m) for m in (1, 6, 12, 24, 36)]
+    + [ims_workload(i) for i in (10_000, 100_000, 200_000)]
+    + [kcs_workload(k) for k in (8, 16, 32, 64)]
+)
+
+
+@pytest.mark.parametrize("wl", WORKLOADS, ids=[w.name for w in WORKLOADS])
+def test_platform_ordering(wl):
+    """FC ≤ PB ≤ ISP ≤ OSP in time; reverse in energy efficiency."""
+    r = {p: run_workload(wl, p) for p in Platform}
+    assert r[Platform.FC].time_s <= r[Platform.PB].time_s * 1.001
+    assert r[Platform.PB].time_s <= r[Platform.ISP].time_s * 1.001
+    assert r[Platform.ISP].time_s <= r[Platform.OSP].time_s * 1.001
+    assert r[Platform.FC].energy_j <= r[Platform.PB].energy_j * 1.001
+
+
+def _geomean(xs):
+    import statistics
+
+    return statistics.geometric_mean(xs)
+
+
+def test_headline_speedups_in_band():
+    """Paper: FC vs OSP/ISP/PB = 32×/25×/3.5× average speedup.  Our model
+    must land in the same regime (±50% band — modelling constants differ)."""
+    fc_osp, fc_isp, fc_pb = [], [], []
+    for wl in WORKLOADS:
+        r = {p: run_workload(wl, p) for p in Platform}
+        fc_osp.append(r[Platform.OSP].time_s / r[Platform.FC].time_s)
+        fc_isp.append(r[Platform.ISP].time_s / r[Platform.FC].time_s)
+        fc_pb.append(r[Platform.PB].time_s / r[Platform.FC].time_s)
+    assert 16 <= _geomean(fc_osp) <= 64, _geomean(fc_osp)
+    assert 12 <= _geomean(fc_isp) <= 50, _geomean(fc_isp)
+    assert 1.8 <= _geomean(fc_pb) <= 7, _geomean(fc_pb)
+
+
+def test_headline_energy_in_band():
+    """Paper: FC vs OSP/PB = 95×/3.3× average energy improvement."""
+    fc_osp, fc_pb = [], []
+    for wl in WORKLOADS:
+        r = {p: run_workload(wl, p) for p in Platform}
+        fc_osp.append(r[Platform.OSP].energy_j / r[Platform.FC].energy_j)
+        fc_pb.append(r[Platform.PB].energy_j / r[Platform.FC].energy_j)
+    assert 48 <= _geomean(fc_osp) <= 190, _geomean(fc_osp)
+    assert 1.6 <= _geomean(fc_pb) <= 6.6, _geomean(fc_pb)
+
+
+def test_bmi_benefit_grows_with_operands():
+    """§8.1 observation 4: FC's benefit grows with operand count; PB's
+    flattens (serial sensing bottleneck)."""
+    s_small = run_workload(bmi_workload(1), Platform.OSP).time_s / run_workload(
+        bmi_workload(1), Platform.FC
+    ).time_s
+    s_big = run_workload(bmi_workload(36), Platform.OSP).time_s / run_workload(
+        bmi_workload(36), Platform.FC
+    ).time_s
+    assert s_big > 4 * s_small
+    pb_small = run_workload(bmi_workload(6), Platform.OSP).time_s / run_workload(
+        bmi_workload(6), Platform.PB
+    ).time_s
+    pb_big = run_workload(bmi_workload(36), Platform.OSP).time_s / run_workload(
+        bmi_workload(36), Platform.PB
+    ).time_s
+    assert pb_big == pytest.approx(pb_small, rel=0.1)  # PB flat
+
+
+def test_ims_fc_equals_pb():
+    """§8.1 observation 6: FC ≈ PB for IMS (result transfer dominates)."""
+    wl = ims_workload(100_000)
+    t_fc = run_workload(wl, Platform.FC).time_s
+    t_pb = run_workload(wl, Platform.PB).time_s
+    assert t_fc == pytest.approx(t_pb, rel=0.05)
+
+
+def test_kcs_pb_flatlines_fc_grows():
+    """§8.1 observation 4 (KCS): PB stops improving beyond k≈16."""
+    pb16 = run_workload(kcs_workload(16), Platform.OSP).time_s / run_workload(
+        kcs_workload(16), Platform.PB
+    ).time_s
+    pb64 = run_workload(kcs_workload(64), Platform.OSP).time_s / run_workload(
+        kcs_workload(64), Platform.PB
+    ).time_s
+    fc16 = run_workload(kcs_workload(16), Platform.OSP).time_s / run_workload(
+        kcs_workload(16), Platform.FC
+    ).time_s
+    fc64 = run_workload(kcs_workload(64), Platform.OSP).time_s / run_workload(
+        kcs_workload(64), Platform.FC
+    ).time_s
+    assert pb64 <= pb16 * 1.05
+    assert fc64 > 2.5 * fc16
+
+
+def test_fig7_tdma_text_anchors():
+    """Fig. 7: tDMA = 27 µs and tEXT = 4 µs for 32 KiB per die."""
+    tl = fig7_timeline(FIG7_SSD)
+    assert tl["tDMA_us"] == pytest.approx(27.3, abs=0.5)
+    assert tl["tEXT_us"] == pytest.approx(4.1, abs=0.2)
+    # OSP is external-IO bound; IFP is sense bound
+    assert tl["osp_round_us"] > tl["isp_round_us"] >= tl["ifp_round_us"]
+
+
+def test_esp_write_bandwidth():
+    """§8.3: ESP writes ≈ 4.7 GB/s — faster than MLC (121.4%) and TLC
+    (166.7%) mode programming, i.e. ESP does not degrade write bandwidth
+    vs the MLC/TLC modes it displaces.  One page per program op per plane.
+    """
+    ssd = DEFAULT_SSD
+
+    def bw(t_us):
+        return ssd.num_planes * ssd.page_bytes / (t_us * 1e-6)
+
+    bw_esp = bw(ssd.t_esp_us)
+    bw_slc = bw(ssd.t_prog_slc_us)
+    bw_mlc = bw(ssd.t_prog_mlc_us)
+    bw_tlc = bw(ssd.t_prog_tlc_us)
+    assert bw_esp == pytest.approx(4.7e9, rel=0.15)  # paper: 4.7 GB/s
+    assert bw_esp / bw_slc == pytest.approx(0.5, abs=0.01)  # 2× tPROG
+    assert bw_esp / bw_mlc == pytest.approx(1.214, abs=0.05)  # paper 121.4%
+    assert bw_esp / bw_tlc == pytest.approx(1.667, abs=0.1)  # paper 166.7%

@@ -1,0 +1,116 @@
+"""Per-kernel correctness: popcount + sign-compression vs jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.popcount import popcount, popcount_ref
+from repro.kernels.signcomp import (
+    compress_signs,
+    decompress_signs,
+    majority_ref,
+    majority_vote,
+    pack_signs_ref,
+    unpack_signs_ref,
+)
+from repro.kernels.signcomp.signcomp import (
+    majority_pallas,
+    pack_signs_pallas,
+    unpack_signs_pallas,
+)
+
+
+@pytest.mark.parametrize(
+    "shape", [(1,), (100,), (3, 1000), (8, 2048), (16, 5000), (1, 1)]
+)
+def test_popcount_matches_ref(shape):
+    rng = np.random.default_rng(sum(shape))
+    x = jnp.array(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(popcount(x)), np.asarray(popcount_ref(x))
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    r=st.integers(1, 20), w=st.integers(1, 200), seed=st.integers(0, 2**31 - 1)
+)
+def test_popcount_property(r, w, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.integers(0, 2**32, (r, w), dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(popcount(x)), np.asarray(popcount_ref(x))
+    )
+
+
+def test_popcount_exact_values():
+    x = jnp.array([[0, 1, 3, 0xFFFFFFFF]], dtype=jnp.uint32)
+    assert int(popcount(x)[0]) == 0 + 1 + 2 + 32
+
+
+@pytest.mark.parametrize("rows,words", [(8, 512), (16, 1024), (4, 512)])
+def test_pack_unpack_kernels_match_ref(rows, words):
+    rng = np.random.default_rng(rows)
+    x = jnp.array(rng.normal(size=(32 * rows, words)).astype(np.float32))
+    packed = pack_signs_pallas(x, block_rows=min(8, rows), block_words=512)
+    np.testing.assert_array_equal(
+        np.asarray(packed), np.asarray(pack_signs_ref(x))
+    )
+    unpacked = unpack_signs_pallas(
+        packed, block_rows=min(8, rows), block_words=512
+    )
+    np.testing.assert_array_equal(
+        np.asarray(unpacked), np.asarray(unpack_signs_ref(packed))
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 100_000), seed=st.integers(0, 2**31 - 1))
+def test_sign_roundtrip_property(n, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.array(rng.normal(size=(n,)).astype(np.float32))
+    back = decompress_signs(compress_signs(g), n)
+    np.testing.assert_array_equal(
+        np.asarray(back), np.asarray(jnp.where(g >= 0, 1.0, -1.0))
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 9), seed=st.integers(0, 2**31 - 1))
+def test_majority_matches_ref(k, seed):
+    rng = np.random.default_rng(seed)
+    s = jnp.array(rng.integers(0, 2**32, (k, 8, 512), dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(majority_vote(s)), np.asarray(majority_ref(s))
+    )
+
+
+def test_majority_semantics_small():
+    """Bit-level majority semantics, odd K: strict majority; ties impossible."""
+    k = 3
+    rng = np.random.default_rng(0)
+    raw = rng.integers(0, 2, size=(k, 64)).astype(np.uint8)
+    from repro.core.bitops import pack_bits, unpack_bits
+
+    stacks = jnp.stack([pack_bits(jnp.array(r)) for r in raw])[:, None, :]
+    stacks = jnp.pad(stacks, ((0, 0), (0, 0), (0, 510)))
+    maj = majority_pallas(stacks, block_rows=1, block_words=512)
+    got = np.asarray(unpack_bits(maj[0, :2], 64))
+    want = (raw.sum(axis=0) * 2 >= k).astype(np.uint8)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_majority_is_signsgd_vote():
+    """End-to-end: majority of compressed sign planes == sign of the sum of
+    signs (odd K) — the signSGD-with-majority-vote aggregation rule."""
+    k, n = 5, 3000
+    rng = np.random.default_rng(42)
+    grads = jnp.array(rng.normal(size=(k, n)).astype(np.float32))
+    packed = jnp.stack([compress_signs(grads[i]) for i in range(k)])
+    maj = majority_vote(packed)
+    got = decompress_signs(maj, n)
+    votes = np.where(np.asarray(grads) >= 0, 1, -1).sum(axis=0)
+    want = np.where(votes >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(got), want)

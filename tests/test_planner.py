@@ -1,0 +1,287 @@
+"""Planner + engine: command plans must compute the right function with the
+right number of sensing operations — including the paper's Fig. 16 example."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.commands import ISCM, MAX_INTER_BLOCKS, MWSCommand
+from repro.core.engine import FlashArray, eval_expr
+from repro.core.expr import Page, and_, nand_, nor_, not_, or_, xnor_, xor_
+from repro.core.placement import Layout, auto_layout
+from repro.core.planner import Planner
+
+W = 16  # words per page in these tests
+
+
+def _make_array(names, *, inverted=(), spread=(), seed=0):
+    """FlashArray with pages placed per-group and random logical contents."""
+    rng = np.random.default_rng(seed)
+    arr = FlashArray()
+    logical = {}
+    plain = [n for n in names if n not in inverted and n not in spread]
+    if plain:
+        arr.layout.place_colocated(plain, inverted=False)
+    if inverted:
+        arr.layout.place_colocated(list(inverted), inverted=True)
+    if spread:
+        arr.layout.place_spread(list(spread))
+    for n in names:
+        words = jnp.array(rng.integers(0, 2**32, (W,), dtype=np.uint32))
+        logical[n] = words
+        arr.fc_write(n, words)
+    return arr, logical
+
+
+def _check(arr, logical, expr, expect_sensing=None):
+    plan = Planner(arr.layout).compile(expr)
+    got = arr.execute(plan)
+    want = eval_expr(expr, logical)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if expect_sensing is not None:
+        assert plan.num_sensing_ops == expect_sensing, plan
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Flat multi-operand ops
+# ---------------------------------------------------------------------------
+
+
+def test_and_colocated_single_sensing():
+    """48-operand AND in ONE sensing op — the paper's headline capability."""
+    names = [f"a{i}" for i in range(48)]
+    arr, logical = _make_array(names)
+    _check(arr, logical, and_(*map(Page, names)), expect_sensing=1)
+
+
+def test_or_demorgan_single_sensing():
+    """48-operand OR via inverse-stored pages + inverse read: ONE sensing."""
+    names = [f"a{i}" for i in range(48)]
+    arr, logical = _make_array(names, inverted=tuple(names))
+    plan = _check(arr, logical, or_(*map(Page, names)), expect_sensing=1)
+    (cmd,) = [c for c in plan.commands if isinstance(c, MWSCommand)]
+    assert cmd.iscm.inverse_read
+
+
+def test_nand_nor_single_sensing():
+    names = ["x", "y", "z"]
+    arr, logical = _make_array(names)
+    _check(arr, logical, nand_(*map(Page, names)), expect_sensing=1)
+    arr2, logical2 = _make_array(names, inverted=tuple(names))
+    _check(arr2, logical2, nor_(*map(Page, names)), expect_sensing=1)
+
+
+def test_or_interblock_plain():
+    """OR of plain pages in different blocks: inter-block MWS, ≤4 blocks per
+    command (power budget) with C-latch accumulation beyond that."""
+    names = [f"v{i}" for i in range(6)]
+    arr, logical = _make_array(names, spread=tuple(names))
+    plan = _check(arr, logical, or_(*map(Page, names)), expect_sensing=2)
+    cmds = [c for c in plan.commands if isinstance(c, MWSCommand)]
+    assert cmds[0].num_blocks == MAX_INTER_BLOCKS
+    assert cmds[1].num_blocks == 2
+
+
+def test_and_across_blocks_accumulates_in_s_latch():
+    """AND spanning blocks: one intra-block MWS per block, S-accumulated
+    (paper §6.1 'Increasing Maximum Number of Operands')."""
+    names = [f"a{i}" for i in range(96)]  # 2 full blocks of 48
+    arr, logical = _make_array(names)
+    plan = _check(arr, logical, and_(*map(Page, names)), expect_sensing=2)
+    cmds = [c for c in plan.commands if isinstance(c, MWSCommand)]
+    assert cmds[0].iscm.init_s_latch and not cmds[1].iscm.init_s_latch
+
+
+def test_xor_chain():
+    names = ["p", "q", "r"]
+    arr, logical = _make_array(names)
+    _check(arr, logical, xor_(*map(Page, names)), expect_sensing=3)
+    arr2, logical2 = _make_array(names)
+    _check(arr2, logical2, xnor_(*map(Page, names)), expect_sensing=3)
+
+
+def test_not_single_page():
+    arr, logical = _make_array(["a"])
+    _check(arr, logical, not_(Page("a")), expect_sensing=1)
+
+
+# ---------------------------------------------------------------------------
+# The paper's worked example (Fig. 16 / Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def test_fig16_eq4_example():
+    """{A1 + (B1·B2·B3·B4)} · (C1+C3) · (D2+D4) with the paper's placement:
+    A in Blk1, B in Blk2, C̄ in Blk3, D̄ in Blk4 — exactly TWO MWS commands,
+    inverse-read command first, second command accumulating (no latch init).
+    """
+    rng = np.random.default_rng(42)
+    arr = FlashArray()
+    logical = {}
+    for blk, (prefix, n, inv) in enumerate(
+        [("A", 4, False), ("B", 4, False), ("C", 4, True), ("D", 4, True)]
+    ):
+        for wl in range(n):
+            name = f"{prefix}{wl + 1}"
+            arr.layout.place(name, blk, wl, inverted=inv)
+    for name in list(arr.layout.placements):
+        words = jnp.array(rng.integers(0, 2**32, (W,), dtype=np.uint32))
+        logical[name] = words
+        arr.fc_write(name, words)
+
+    A1, C1, C3, D2, D4 = (Page(n) for n in ["A1", "C1", "C3", "D2", "D4"])
+    Bs = and_(*(Page(f"B{i}") for i in range(1, 5)))
+    expr = and_(or_(A1, Bs), or_(C1, C3), or_(D2, D4))
+
+    plan = _check(arr, logical, expr, expect_sensing=2)
+    cmds = [c for c in plan.commands if isinstance(c, MWSCommand)]
+    # first command: inverse read over (C̄1,C̄3) and (D̄2,D̄4) = two blocks
+    assert cmds[0].iscm.inverse_read and cmds[0].num_blocks == 2
+    assert cmds[0].iscm.init_s_latch
+    # second command: A1 + B-block string-AND, inter-block, accumulating
+    assert not cmds[1].iscm.inverse_read and cmds[1].num_blocks == 2
+    assert not cmds[1].iscm.init_s_latch  # accumulation (Fig. 16 note)
+
+
+def test_eq1_or_of_string_ands_single_sensing():
+    """Eq. 1: (A1·…·AN) + (B1·…·BN) in ONE inter-block sensing."""
+    names = [f"A{i}" for i in range(4)] + [f"B{i}" for i in range(4)]
+    arr = FlashArray()
+    rng = np.random.default_rng(0)
+    logical = {}
+    for wl in range(4):
+        arr.layout.place(f"A{wl}", 0, wl)
+        arr.layout.place(f"B{wl}", 1, wl)
+    for n in names:
+        words = jnp.array(rng.integers(0, 2**32, (W,), dtype=np.uint32))
+        logical[n] = words
+        arr.fc_write(n, words)
+    expr = or_(
+        and_(*(Page(f"A{i}") for i in range(4))),
+        and_(*(Page(f"B{i}") for i in range(4))),
+    )
+    _check(arr, logical, expr, expect_sensing=1)
+
+
+def test_inverse_groups_distinct_blocks_merge_no_spill():
+    """(c1+c2)·(d1+d2)·e1 with the OR groups in different blocks: the
+    De Morgan merge folds both inverse units into ONE inter-block inverse
+    command (Fig. 16 pattern) — no spill required."""
+    arr = FlashArray()
+    rng = np.random.default_rng(3)
+    logical = {}
+    arr.layout.place_colocated(["c1", "c2"], inverted=True)
+    arr.layout.place_colocated(["d1", "d2"], inverted=True)
+    arr.layout.place_colocated(["e1"], inverted=False)
+    for n in ["c1", "c2", "d1", "d2", "e1"]:
+        words = jnp.array(rng.integers(0, 2**32, (W,), dtype=np.uint32))
+        logical[n] = words
+        arr.fc_write(n, words)
+    expr = and_(
+        or_(Page("c1"), Page("c2")), or_(Page("d1"), Page("d2")), Page("e1")
+    )
+    plan = _check(arr, logical, expr, expect_sensing=2)
+    assert plan.num_spills == 0
+
+
+def test_same_block_inverse_groups_force_spill():
+    """Two OR-groups co-located in the SAME block cannot be merged into one
+    inverse sensing (their strings would AND together) — the planner must
+    spill the extra group via an ESP-programmed scratch page."""
+    arr = FlashArray()
+    rng = np.random.default_rng(4)
+    logical = {}
+    for wl, n in enumerate(["c1", "c2", "c3", "c4"]):
+        arr.layout.place(n, 0, wl, inverted=True)
+    for n in ["c1", "c2", "c3", "c4"]:
+        words = jnp.array(rng.integers(0, 2**32, (W,), dtype=np.uint32))
+        logical[n] = words
+        arr.fc_write(n, words)
+    expr = and_(or_(Page("c1"), Page("c2")), or_(Page("c3"), Page("c4")))
+    plan = _check(arr, logical, expr)
+    assert plan.num_spills >= 1
+
+
+# ---------------------------------------------------------------------------
+# Properties: random expressions with auto-layout
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def _expressions(draw, max_leaves=10):
+    ops = draw(
+        st.lists(
+            st.sampled_from(["and", "or", "xor", "nand", "nor", "xnor"]),
+            min_size=1,
+            max_size=3,
+        )
+    )
+    counter = [0]
+
+    def leaf():
+        counter[0] += 1
+        return Page(f"p{counter[0]}")
+
+    def build(depth):
+        op = ops[depth % len(ops)]
+        n = draw(st.integers(2, 4))
+        children = []
+        for _ in range(n):
+            if depth + 1 < len(ops) and draw(st.booleans()):
+                children.append(build(depth + 1))
+            else:
+                children.append(leaf())
+        fn = {
+            "and": and_,
+            "or": or_,
+            "xor": xor_,
+            "nand": nand_,
+            "nor": nor_,
+            "xnor": xnor_,
+        }[op]
+        return fn(*children)
+
+    return build(0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(expr=_expressions(), seed=st.integers(0, 2**31 - 1))
+def test_random_expressions_plan_correctly(expr, seed):
+    from repro.core.expr import leaves
+
+    rng = np.random.default_rng(seed)
+    arr = FlashArray()
+    arr.layout = auto_layout(expr)
+    logical = {}
+    for p in leaves(expr):
+        if p.name in logical:
+            continue
+        words = jnp.array(rng.integers(0, 2**32, (W,), dtype=np.uint32))
+        logical[p.name] = words
+        arr.fc_write(p.name, words)
+    plan = Planner(arr.layout).compile(expr)
+    got = arr.execute(plan)
+    want = eval_expr(expr, logical)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_iscm_ordering_rule_enforced():
+    with pytest.raises(ValueError):
+        ISCM(inverse_read=True, init_s_latch=False)
+
+
+def test_esp_pages_read_error_free_nonesp_noisy():
+    """ESP-programmed pages read back exactly; regular-programmed pages at
+    high P/E cycles do not (the paper's reliability motivation)."""
+    rng = np.random.default_rng(9)
+    words = jnp.array(rng.integers(0, 2**32, (2048,), dtype=np.uint32))
+    arr = FlashArray()
+    arr.fc_write("good", words, esp=True)
+    arr.fc_write("bad", words, esp=False)
+    arr.pec[arr.layout["bad"].block] = 10_000
+    assert (arr.fc_read(Page("good")) == words).all()
+    noisy = arr.fc_read(Page("bad"))
+    assert not bool((noisy == words).all())

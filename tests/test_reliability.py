@@ -1,0 +1,133 @@
+"""Reliability model: the paper's stated anchors must hold exactly."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bitops import BitOp
+from repro.core.reliability import (
+    ESP_ZERO_TESP,
+    REF_PEC,
+    REF_RETENTION_DAYS,
+    UBER_TARGET,
+    CellMode,
+    ProgramConfig,
+    block_quality_quantile,
+    inject_bit_errors,
+    randomize_words,
+    rber,
+)
+from repro.kernels.mws import mws_reduce
+
+
+def _r(mode, rand=True, tesp=1.0, **kw):
+    return rber(ProgramConfig(mode, rand, tesp), **kw)
+
+
+def test_randomization_off_factors():
+    """Fig. 8: disabling randomization => 1.91× (SLC) / 4.92× (MLC)."""
+    assert _r(CellMode.SLC, False) / _r(CellMode.SLC, True) == pytest.approx(
+        1.91
+    )
+    assert _r(CellMode.MLC, False) / _r(CellMode.MLC, True) == pytest.approx(
+        4.92
+    )
+
+
+def test_mlc_over_slc_factor():
+    """Fig. 8: MLC-mode RBER up to 4× SLC-mode."""
+    assert _r(CellMode.MLC) / _r(CellMode.SLC) == pytest.approx(4.0)
+
+
+def test_mlc_range_spans_paper_values():
+    """§3.2: MLC RBER range across Fig. 8(b) is 8.6e-4 … 1.6e-2."""
+    lo = _r(CellMode.MLC, True, pec=1_000, retention_days=1)
+    hi = _r(CellMode.MLC, False, pec=10_000, retention_days=365)
+    assert lo == pytest.approx(8.6e-4, rel=0.02)
+    assert hi == pytest.approx(1.6e-2, rel=0.02)
+
+
+def test_slc_rand_is_orders_above_uber():
+    """§3.2: even SLC+rand is ~12 orders of magnitude above the UBER target."""
+    orders = math.log10(_r(CellMode.SLC, True) / UBER_TARGET)
+    assert 10.0 <= orders <= 13.0
+
+
+def test_esp_zero_errors_at_1_9x():
+    """Fig. 11: tESP >= 1.9×tPROG => zero bit errors (all blocks)."""
+    worst = block_quality_quantile(0.999)
+    assert (
+        rber(
+            ProgramConfig(CellMode.SLC, False, ESP_ZERO_TESP),
+            block_quality=worst,
+        )
+        == 0.0
+    )
+
+
+def test_esp_median_block_order_of_magnitude_at_1_6x():
+    """Fig. 11: +60% tESP => ~1 order of magnitude RBER reduction (median)."""
+    base = _r(CellMode.SLC, False, 1.0)
+    better = _r(CellMode.SLC, False, 1.6)
+    assert base / better == pytest.approx(10.0, rel=0.15)
+
+
+def test_esp_monotone_in_tesp():
+    vals = [_r(CellMode.SLC, False, t) for t in np.linspace(1.0, 1.9, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    pec=st.integers(100, 50_000),
+    ret=st.floats(0.1, 1000),
+    q=st.floats(0.01, 0.99),
+)
+def test_rber_monotone_properties(pec, ret, q):
+    """More PEC, more retention, worse block => RBER non-decreasing."""
+    cfg = ProgramConfig(CellMode.SLC, True, 1.0)
+    bq = block_quality_quantile(q)
+    r0 = rber(cfg, pec=pec, retention_days=ret, block_quality=bq)
+    assert rber(cfg, pec=pec * 2, retention_days=ret, block_quality=bq) >= r0
+    assert rber(cfg, pec=pec, retention_days=ret * 2, block_quality=bq) >= r0
+
+
+def test_tlc_worse_than_mlc():
+    assert _r(CellMode.TLC) > _r(CellMode.MLC)
+
+
+def test_randomize_involutive():
+    rng = np.random.default_rng(0)
+    w = jnp.array(rng.integers(0, 2**32, (4, 64), dtype=np.uint32))
+    assert (randomize_words(randomize_words(w, 7), 7) == w).all()
+    assert not (randomize_words(w, 7) == w).all()
+
+
+def test_mws_on_randomized_data_is_wrong():
+    """The paper's key incompatibility claim (§3.2): bitwise ops on scrambled
+    operands, de-randomized afterwards, do NOT equal the true result."""
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.integers(0, 2**32, (8, 128), dtype=np.uint32))
+    scrambled = jnp.stack([randomize_words(x[i], i) for i in range(8)])
+    wrong = randomize_words(mws_reduce(scrambled, BitOp.AND), 0)
+    right = mws_reduce(x, BitOp.AND)
+    assert not bool((wrong == right).all())
+
+
+def test_error_injection_rate():
+    rng = np.random.default_rng(2)
+    w = jnp.array(rng.integers(0, 2**32, (64, 256), dtype=np.uint32))
+    p = 1e-2
+    noisy = inject_bit_errors(w, p, seed=3)
+    flipped = int(
+        np.asarray(
+            jnp.sum(jnp.bitwise_count((w ^ noisy).astype(jnp.uint32)))
+        )
+    )
+    nbits = 64 * 256 * 32
+    assert abs(flipped / nbits - p) < 0.2 * p
+    assert (inject_bit_errors(w, 0.0, seed=3) == w).all()

@@ -1,0 +1,95 @@
+"""Guard the generated dry-run/roofline artifacts (when present).
+
+These tests validate the *products* of the 512-device sweeps so a
+regression that breaks a cell shows up in CI even though the sweeps
+themselves run out-of-band.  Skipped when results/ hasn't been generated.
+"""
+
+import glob
+import json
+import os
+
+import pytest
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(sub):
+    files = glob.glob(os.path.join(RESULTS, sub, "*.json"))
+    return [json.load(open(f)) for f in files]
+
+
+dryrun = pytest.mark.skipif(
+    not glob.glob(os.path.join(RESULTS, "dryrun", "*.json")),
+    reason="dry-run results not generated",
+)
+roofline = pytest.mark.skipif(
+    not glob.glob(os.path.join(RESULTS, "roofline", "*.json")),
+    reason="roofline results not generated",
+)
+
+
+@dryrun
+def test_all_dryrun_cells_ok():
+    cells = _load("dryrun")
+    assert cells, "no dry-run cells"
+    bad = [c for c in cells if c["status"] != "ok"]
+    assert not bad, [(c["arch"], c["shape"], c["mesh"]) for c in bad]
+
+
+@dryrun
+def test_dryrun_covers_both_meshes():
+    cells = _load("dryrun")
+    meshes = {c["mesh"] for c in cells}
+    assert {"16x16", "2x16x16"} <= meshes
+
+
+@dryrun
+def test_multipod_halves_per_chip_arguments():
+    """Doubling chips should not increase per-chip argument bytes; for
+    sharded-dominated cells it should shrink them (the pod axis shards)."""
+    cells = {
+        (c["arch"], c["shape"], c["mesh"]): c
+        for c in _load("dryrun")
+        if c["status"] == "ok"
+    }
+    checked = 0
+    for (arch, shape, mesh), c in cells.items():
+        if mesh != "16x16":
+            continue
+        mp = cells.get((arch, shape, "2x16x16"))
+        if mp is None:
+            continue
+        a1 = c["memory"]["argument_bytes"]
+        a2 = mp["memory"]["argument_bytes"]
+        if a1 and a2:
+            assert a2 <= a1 * 1.05, (arch, shape, a1, a2)
+            checked += 1
+    assert checked >= 10
+
+
+@roofline
+def test_roofline_terms_sane():
+    cells = [c for c in _load("roofline") if c["status"] == "ok"]
+    assert cells
+    for c in cells:
+        ro = c["roofline"]
+        assert ro["compute_s"] >= 0, c["arch"]
+        assert ro["memory_s"] > 0, c["arch"]
+        assert ro["collective_s"] >= 0, c["arch"]
+        assert ro["dominant"] in ("compute", "memory", "collective")
+        assert 0 < c["useful_ratio"] <= 1.2, (
+            c["arch"],
+            c["shape"],
+            c["useful_ratio"],
+        )
+
+
+@roofline
+def test_kimi_is_collective_bound_at_baseline():
+    """The §Perf-2 premise, pinned: baseline kimi train is collective-bound."""
+    for c in _load("roofline"):
+        if c["arch"] == "kimi-k2-1t-a32b" and c["shape"] == "train_4k":
+            assert c["roofline"]["dominant"] == "collective"
+            return
+    pytest.skip("cell missing")
