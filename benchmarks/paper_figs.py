@@ -4,7 +4,6 @@ stated anchors where the text gives them."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.reliability import (
     CellMode,

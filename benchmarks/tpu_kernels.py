@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.bitops import BitOp
 from repro.kernels.mws import mws_reduce, parabit_reduce
 from repro.kernels.popcount import popcount
-from repro.kernels.signcomp import compress_signs, decompress_signs
+from repro.kernels.signcomp import compress_signs
 
 
 def _time(fn, *args, reps=3):

@@ -8,7 +8,6 @@ Run:  PYTHONPATH=src python examples/flash_analytics.py
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitops import BitOp
 from repro.core.engine import FlashArray
 from repro.core.expr import Page, and_, or_
 from repro.flashsim import (

@@ -132,13 +132,16 @@ def reduce_words(stack: jax.Array, op: BitOp) -> jax.Array:
     This is the *semantic* definition of an MWS operation; the Pallas kernel in
     ``repro.kernels.mws`` must match it bit-exactly (see tests).
     """
-    base = op.base
-    if base is BitOp.AND:
-        out = jnp.bitwise_and.reduce(stack, axis=0)
-    elif base is BitOp.OR:
-        out = jnp.bitwise_or.reduce(stack, axis=0)
-    else:
-        out = jnp.bitwise_xor.reduce(stack, axis=0)
+    # NOTE: jnp.bitwise_and.reduce is unusable on uint32 under numpy>=2.0
+    # (its -1 init value overflows), so fold explicitly.
+    fn = {
+        BitOp.AND: jnp.bitwise_and,
+        BitOp.OR: jnp.bitwise_or,
+        BitOp.XOR: jnp.bitwise_xor,
+    }[op.base]
+    out = stack[0]
+    for i in range(1, stack.shape[0]):
+        out = fn(out, stack[i])
     if op.inverted:
         out = ~out
     return out

@@ -17,13 +17,17 @@ for pages placed ``inverted`` (De Morgan storage).  Reads of non-ESP pages
 can inject modelled bit errors (``repro.core.reliability``); ESP pages are
 error-free — the paper's headline reliability result.
 
-On TPU, plans whose sensing ops reduce the same operand stack collapse into
-the fused MWS kernel (``repro.kernels.mws``); `execute` uses it for every
-sensing command.
+Page data lives in a :class:`repro.core.store.PackedStore` — one contiguous
+``(slots, words)`` array — so sensing is a *gather* of the command's
+wordline rows plus at most two fused MWS kernel dispatches (AND within
+blocks, OR across blocks), never a Python loop over pages.  The ragged
+per-block wordline sets are padded to a rectangle with the store's all-ones
+identity row, letting one kernel call cover every target block.
 """
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 
 import jax
@@ -47,18 +51,65 @@ from repro.core.reliability import (
     inject_bit_errors,
     rber,
 )
+from repro.core.store import IDENTITY_SLOT, PackedStore
 from repro.kernels.mws import mws_reduce
+
+
+def _stable_seed(name: str) -> int:
+    """Deterministic per-page seed component.
+
+    ``hash(str)`` varies with ``PYTHONHASHSEED``, which made reliability
+    simulations irreproducible across interpreter runs; CRC32 is stable.
+    """
+    return zlib.crc32(name.encode("utf-8")) & 0xFFFF
+
+
+def fused_block_reduce(
+    cube: jax.Array, inverse: bool, *, interpret: bool = True
+) -> jax.Array:
+    """MWS semantics on a gathered ``(blocks, wordlines, words)`` cube.
+
+    AND over the wordline axis of every block in ONE fused ``mws_reduce``
+    dispatch (blocks ride along the word axis, so all planes and blocks are
+    covered at once), then OR across blocks in a second dispatch;
+    ``inverse`` complements the result (inverse-read mode).  Rows padded
+    with the all-ones identity are AND-neutral.
+
+    With ``interpret=True`` (no TPU) the Pallas interpreter's ~ms/call
+    overhead would dominate query serving, so emulation folds with plain
+    XLA ops instead — bit-identical to the kernel (the kernel tests assert
+    exactly that) and efficient under ``jax.vmap``; on real hardware
+    (``interpret=False``) the fused Pallas kernel is dispatched.
+    """
+    k, n, w = cube.shape
+    if interpret:
+        anded = cube[:, 0]
+        for i in range(1, n):
+            anded = anded & cube[:, i]
+        raw = anded[0]
+        for b in range(1, k):
+            raw = raw | anded[b]
+    else:
+        flat = cube.swapaxes(0, 1).reshape(n, k * w)
+        raw = mws_reduce(flat, BitOp.AND, interpret=False).reshape(k, w)
+        raw = (
+            mws_reduce(raw, BitOp.OR, interpret=False) if k > 1 else raw[0]
+        )
+    return ~raw if inverse else raw
 
 
 @dataclass
 class FlashArray:
-    """A (single-plane) Flash-Cosmos array: layout + page store + planner."""
+    """A (single-plane) Flash-Cosmos array: layout + packed page store."""
 
     layout: Layout = field(default_factory=Layout)
-    store: dict[str, jax.Array] = field(default_factory=dict)  # physical
+    store: PackedStore = field(default_factory=PackedStore)
     program_configs: dict[str, ProgramConfig] = field(default_factory=dict)
     pec: dict[int, int] = field(default_factory=dict)  # block -> P/E cycles
     interpret: bool = True
+    # names of non-ESP pages, maintained incrementally so hot paths never
+    # scan program_configs (one entry per (column, value) bitmap adds up)
+    _non_esp: set = field(default_factory=set, repr=False)
 
     # -- host API (fc_write / fc_read, §6.3) -------------------------------
     def fc_write(
@@ -87,6 +138,10 @@ class FlashArray:
             else ProgramConfig(CellMode.SLC, randomized=False, tesp_ratio=1.0)
         )
         self.program_configs[name] = cfg
+        if esp:
+            self._non_esp.discard(name)
+        else:
+            self._non_esp.add(name)
         physical = ~words if inverted else words
         self.store[name] = physical
         self.pec[p.block] = self.pec.get(p.block, 0) + 1
@@ -97,42 +152,50 @@ class FlashArray:
         return self.execute(plan)
 
     # -- sensing ------------------------------------------------------------
-    def _page_by_location(self, block: int, wordline: int) -> str:
-        for name, p in self.layout.placements.items():
-            if p.block == block and p.wordline == wordline:
-                return name
-        raise KeyError(f"no page at block {block} wl {wordline}")
+    def _gather_cube(self, cmd: MWSCommand, seed: int) -> jax.Array:
+        """Gather the command's wordline rows into a padded (k, n, W) cube.
+
+        Non-ESP pages get modelled bit errors injected on their gathered
+        rows; ESP pages (the common case) come straight from the packed
+        snapshot, so the gather is one fancy-index over the device array.
+        """
+        snap = self.store.snapshot()
+        n_max = max(len(t.wordlines) for t in cmd.targets)
+        idx = []
+        noisy: list[tuple[int, int, str]] = []
+        for bi, t in enumerate(cmd.targets):
+            row = []
+            for wl in t.wordlines:
+                name = self.layout.page_at(t.block, wl)
+                row.append(self.store.slot(name))
+                if name in self._non_esp:
+                    noisy.append((bi, len(row) - 1, name))
+            row.extend([IDENTITY_SLOT] * (n_max - len(row)))
+            idx.append(row)
+        cube = snap[jnp.asarray(idx)]
+        for bi, wi, name in noisy:
+            p = self.layout[name]
+            r = rber(
+                self.program_configs[name], pec=self.pec.get(p.block, 0)
+            )
+            cube = cube.at[bi, wi].set(
+                inject_bit_errors(
+                    cube[bi, wi], r, seed=seed ^ _stable_seed(name)
+                )
+            )
+        return cube
 
     def _sense(self, cmd: MWSCommand, seed: int) -> jax.Array:
-        per_block = []
-        for t in cmd.targets:
-            names = [self._page_by_location(t.block, wl) for wl in t.wordlines]
-            stack = jnp.stack([self._physical_read(n, seed) for n in names])
-            per_block.append(
-                mws_reduce(stack, BitOp.AND, interpret=self.interpret)
-            )
-        raw = (
-            per_block[0]
-            if len(per_block) == 1
-            else mws_reduce(
-                jnp.stack(per_block), BitOp.OR, interpret=self.interpret
-            )
+        cube = self._gather_cube(cmd, seed)
+        return fused_block_reduce(
+            cube, cmd.iscm.inverse_read, interpret=self.interpret
         )
-        return ~raw if cmd.iscm.inverse_read else raw
-
-    def _physical_read(self, name: str, seed: int) -> jax.Array:
-        words = self.store[name]
-        cfg = self.program_configs.get(name)
-        if cfg is None or cfg.is_esp:
-            return words
-        p = self.layout[name]
-        r = rber(cfg, pec=self.pec.get(p.block, 0))
-        return inject_bit_errors(words, r, seed=seed ^ hash(name) & 0xFFFF)
 
     # -- plan execution -------------------------------------------------------
     def execute(self, plan: CommandPlan, seed: int = 0) -> jax.Array:
         s = c = None
         out = None
+        w = self.store.num_words
         for i, cmd in enumerate(plan.commands):
             if isinstance(cmd, MWSCommand):
                 raw = self._sense(cmd, seed + i)
@@ -148,7 +211,7 @@ class FlashArray:
                 # logical result is the complement of the latch, the planner
                 # recorded that in the scratch page's layout.inverted flag.
                 value = s if cmd.source == "S" else c
-                self.store[cmd.page_name] = value
+                self.store[cmd.page_name] = value[:w]
                 self.program_configs[cmd.page_name] = ProgramConfig(
                     CellMode.SLC, randomized=False, tesp_ratio=2.0
                 )
@@ -159,7 +222,7 @@ class FlashArray:
             elif isinstance(cmd, ESPCommand):
                 pass  # data writes flow through fc_write in this model
         assert out is not None, "plan missing TransferCommand"
-        return out
+        return out[:w]
 
 
 def eval_expr(e: Expr, logical: dict[str, jax.Array]) -> jax.Array:

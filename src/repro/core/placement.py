@@ -18,7 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.commands import WLS_PER_BLOCK
-from repro.core.expr import Expr, Node, Page, leaves
+from repro.core.expr import Expr, Node, Page
 from repro.core.bitops import BitOp
 
 
@@ -36,6 +36,10 @@ class Layout:
     _block_fill: dict[int, int] = field(default_factory=dict)
     _next_block: int = 0
     _scratch_count: int = 0
+    # reverse index (block, wordline) -> name, maintained by place(); the
+    # engine resolves every sensed wordline through it, so lookup must not
+    # scan all placements.
+    _by_location: dict[tuple[int, int], str] = field(default_factory=dict)
 
     # -- explicit placement ------------------------------------------------
     def place(
@@ -45,13 +49,50 @@ class Layout:
             raise ValueError(f"page {name!r} already placed")
         if not 0 <= wordline < self.wls_per_block:
             raise ValueError("wordline out of range")
+        if (block, wordline) in self._by_location:
+            raise ValueError(
+                f"block {block} wl {wordline} already holds "
+                f"{self._by_location[(block, wordline)]!r}"
+            )
         p = PagePlacement(block, wordline, inverted)
         self.placements[name] = p
+        self._by_location[(block, wordline)] = name
         self._block_fill[block] = max(
             self._block_fill.get(block, 0), wordline + 1
         )
         self._next_block = max(self._next_block, block + 1)
         return p
+
+    def page_at(self, block: int, wordline: int) -> str:
+        """O(1) reverse lookup of the page programmed at a physical location."""
+        try:
+            return self._by_location[(block, wordline)]
+        except KeyError:
+            raise KeyError(f"no page at block {block} wl {wordline}") from None
+
+    # -- snapshot / rollback (planner trial compiles) ----------------------
+    def snapshot(self) -> tuple:
+        """Capture all mutable state; pair with :meth:`restore`.
+
+        Lives on Layout (not its callers) so that growing the class with a
+        new index or counter keeps rollback correct in one place.
+        """
+        return (
+            dict(self.placements),
+            dict(self._block_fill),
+            self._next_block,
+            self._scratch_count,
+            dict(self._by_location),
+        )
+
+    def restore(self, snap: tuple) -> None:
+        (
+            self.placements,
+            self._block_fill,
+            self._next_block,
+            self._scratch_count,
+            self._by_location,
+        ) = (dict(snap[0]), dict(snap[1]), snap[2], snap[3], dict(snap[4]))
 
     # -- allocation helpers --------------------------------------------
     def alloc_block(self) -> int:

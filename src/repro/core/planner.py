@@ -242,7 +242,13 @@ class Planner:
             [Unit(inv_cmds[0], True)] if inv_cmds else []
         ) + plain_units
         for extra in inv_cmds[1:]:
-            plan.commands.append(MWSCommand(ISCM(inverse_read=True), extra))
+            # init_c_latch must stay False: when this AND chain is inlined
+            # into an OR chain, a C-init here would wipe the partial OR.
+            plan.commands.append(
+                MWSCommand(
+                    ISCM(inverse_read=True, init_c_latch=False), extra
+                )
+            )
             name, block, wl = self.layout.alloc_scratch()
             self.layout.place(name, block, wl)
             plan.commands.append(SpillCommand(block, wl, name, source="S"))
@@ -264,19 +270,37 @@ class Planner:
     def _compile_or_chain(self, e: Node, plan: CommandPlan) -> None:
         # Non-unit AND children can be inlined: run their S-chain and pulse
         # move-S-to-C only on the LAST command (intermediate partial ANDs
-        # must not leak into the C-latch OR).  Everything else goes through
-        # the unit/spill path.
+        # must not leak into the C-latch OR).  Chains whose own sub-plan
+        # needs the C-latch (spilled OR/XOR subexpressions) CANNOT be
+        # inlined — they would clobber the accumulating OR — and go through
+        # the unit/spill path like everything else.
         unit_kids: list[Expr] = []
-        inline_chains: list[Node] = []
+        inline_chains: list[tuple[Node, CommandPlan]] = []
         for k in e.children:
             if (
                 isinstance(k, Node)
                 and k.op is BitOp.AND
                 and _as_unit(k, self.layout) is None
             ):
-                inline_chains.append(k)
-            else:
-                unit_kids.append(k)
+                # Trial-compile against a layout snapshot: a rejected chain
+                # must not leak its scratch placements (they would pile up
+                # in a long-running service) nor advance the scratch
+                # counter for pages that are recompiled via _spill below.
+                snap = self.layout.snapshot()
+                sub = CommandPlan()
+                self._compile_and_chain(k, sub)
+                if not any(
+                    isinstance(c, XORCommand)
+                    or (
+                        isinstance(c, MWSCommand)
+                        and (c.iscm.init_c_latch or c.iscm.move_s_to_c)
+                    )
+                    for c in sub.commands
+                ):
+                    inline_chains.append((k, sub))
+                    continue
+                self.layout.restore(snap)
+            unit_kids.append(k)
         units = self._units_or_spill(tuple(unit_kids), plan)
         # Merge plain single-block units into inter-block commands (Eq. 1).
         plain = [u for u in units if not u.inverse and len(u.targets) == 1]
@@ -308,9 +332,7 @@ class Planner:
                 )
             )
             first_c = False
-        for chain in inline_chains:
-            sub = CommandPlan()
-            self._compile_and_chain(chain, sub)
+        for _chain, sub in inline_chains:
             assert not sub.result_invert  # op is AND (not NAND) by filter
             cmds = [c for c in sub.commands if isinstance(c, MWSCommand)]
             last = cmds[-1]

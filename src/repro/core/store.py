@@ -1,0 +1,136 @@
+"""Packed page store: the contiguous array behind the Flash-Cosmos engine.
+
+The seed engine kept page data in a ``dict[str, Array]`` and sensed with a
+Python loop over pages.  :class:`PackedStore` packs every programmed page
+into one contiguous ``(planes, slots, words_per_plane)`` buffer — the layout
+analogue of a multi-plane NAND die where a logical bit vector is striped
+across planes and every plane holds the same (block, wordline) grid.  An
+MWS command then becomes a *gather* of slot rows plus one fused kernel
+dispatch over the whole word axis (= all planes at once), instead of one
+Python-level reduce per page.
+
+Slot 0 is reserved for an all-ones row: the AND identity used to pad the
+ragged per-block wordline sets of an inter-block MWS to a rectangle, so a
+whole command batch reduces in a single Pallas call.
+
+Writes append to a host-side ``numpy`` buffer (amortized doubling); the
+device-side ``jax`` snapshot is materialized lazily and invalidated on
+write, so steady-state query serving gathers from one cached array.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+IDENTITY_SLOT = 0  # all-ones row (AND identity / pad row), always present
+
+_ONES = np.uint32(0xFFFFFFFF)
+
+
+@dataclass
+class PackedStore:
+    """Name-addressed packed page store striped over ``planes`` planes.
+
+    All pages share one word count ``W`` (fixed by the first write); each
+    page occupies one *slot* of ``planes * words_per_plane`` words, where
+    ``words_per_plane = ceil(W / planes)`` (tail padding is sliced off on
+    read).
+    """
+
+    planes: int = 1
+    _slots: dict[str, int] = field(default_factory=dict)
+    _buf: np.ndarray | None = None  # (capacity, planes * wpp) uint32
+    _n: int = 0
+    _words: int | None = None  # logical words per page (pre-padding)
+    _snapshot: jax.Array | None = None
+
+    # -- geometry ----------------------------------------------------------
+    @property
+    def num_words(self) -> int | None:
+        """Logical words per page (None until the first write)."""
+        return self._words
+
+    @property
+    def padded_words(self) -> int:
+        assert self._words is not None
+        return -(-self._words // self.planes) * self.planes
+
+    @property
+    def words_per_plane(self) -> int:
+        return self.padded_words // self.planes
+
+    @property
+    def num_slots(self) -> int:
+        return self._n
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._slots
+
+    # -- writes ------------------------------------------------------------
+    def _ensure_buf(self, words: int) -> None:
+        if self._buf is not None:
+            return
+        self._words = words
+        wp = self.padded_words
+        self._buf = np.empty((16, wp), dtype=np.uint32)
+        self._buf[0] = _ONES  # identity row
+        self._n = 1
+
+    def __setitem__(self, name: str, words) -> None:
+        w = np.asarray(words, dtype=np.uint32).reshape(-1)
+        self._ensure_buf(w.shape[0])
+        if w.shape[0] != self._words:
+            raise ValueError(
+                f"page {name!r} has {w.shape[0]} words, store fixed at "
+                f"{self._words}"
+            )
+        row = np.zeros((self.padded_words,), dtype=np.uint32)
+        row[: self._words] = w
+        slot = self._slots.get(name)
+        if slot is None:
+            if self._n == self._buf.shape[0]:
+                grown = np.empty(
+                    (2 * self._buf.shape[0], self._buf.shape[1]),
+                    dtype=np.uint32,
+                )
+                grown[: self._n] = self._buf[: self._n]
+                self._buf = grown
+            slot = self._n
+            self._n += 1
+            self._slots[name] = slot
+        self._buf[slot] = row
+        self._snapshot = None
+
+    # -- reads -------------------------------------------------------------
+    def slot(self, name: str) -> int:
+        return self._slots[name]
+
+    def __getitem__(self, name: str) -> jax.Array:
+        slot = self._slots[name]
+        return jnp.asarray(self._buf[slot, : self._words])
+
+    def snapshot(self) -> jax.Array:
+        """Device-side ``(slots, planes * words_per_plane)`` packed array.
+
+        Cached until the next write; a multi-plane gather + reduce over this
+        array covers every plane in one kernel dispatch because planes are
+        word-axis shards of each slot row.
+        """
+        if self._snapshot is None:
+            assert self._buf is not None, "empty store has no snapshot"
+            self._snapshot = jnp.asarray(self._buf[: self._n])
+        return self._snapshot
+
+    def plane_view(self) -> jax.Array:
+        """The same data as ``(planes, slots, words_per_plane)``."""
+        snap = self.snapshot()
+        return snap.reshape(self._n, self.planes, self.words_per_plane).swapaxes(
+            0, 1
+        )

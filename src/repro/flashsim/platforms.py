@@ -152,9 +152,10 @@ def run_workload(
         )
 
     assert platform is Platform.FC
+    cmd_pairs = wl.fc_command_pairs
     t_cmd_us = sum(
-        mws_latency_us(ssd.t_r_us, s.n_blocks, s.max_wls_per_block)
-        for s in wl.fc_commands
+        mws_latency_us(ssd.t_r_us, s.n_blocks, s.max_wls_per_block) * cnt
+        for s, cnt in cmd_pairs
     )
     t_sense = t_cmd_us * 1e-6 * positions * Q
     t_res_int = result_bytes / ssd.internal_bw
@@ -166,7 +167,8 @@ def run_workload(
             mws_energy_j(
                 ssd.t_r_us, ssd.p_read_w, s.n_blocks, s.max_wls_per_block
             )
-            for s in wl.fc_commands
+            * cnt
+            for s, cnt in cmd_pairs
         )
         * positions
         * ssd.num_planes
@@ -186,7 +188,7 @@ def run_workload(
         {
             "t_sense": t_sense,
             "t_result_ext": t_res_ext,
-            "mws_commands": len(wl.fc_commands),
+            "mws_commands": sum(cnt for _, cnt in cmd_pairs),
             "bottleneck": "sense" if t_sense >= t_res_ext else "external-io",
             "useful_bits": useful_bits,
         },

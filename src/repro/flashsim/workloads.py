@@ -33,8 +33,19 @@ class BulkBitwiseWorkload:
     num_queries: int = 1
     host_postprocess: bool = False  # e.g. BMI bit-count on the host
     fc_commands: tuple[MWSCommandShape, ...] = field(default_factory=tuple)
+    # weighted alternative to fc_commands for long traces: (shape, count)
+    # pairs keep the workload O(distinct shapes) instead of O(commands)
+    fc_command_counts: tuple[tuple[MWSCommandShape, int], ...] = field(
+        default_factory=tuple
+    )
     # sanity metadata
     fc_sensing_ops: int = 0
+
+    @property
+    def fc_command_pairs(self) -> tuple[tuple[MWSCommandShape, int], ...]:
+        if self.fc_command_counts:
+            return self.fc_command_counts
+        return tuple((s, 1) for s in self.fc_commands)
 
 
 def _shapes_from_plan(plan) -> tuple[MWSCommandShape, ...]:

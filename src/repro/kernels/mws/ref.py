@@ -3,9 +3,8 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.bitops import BitOp
+from repro.core.bitops import BitOp, reduce_words
 
 
 def mws_reduce_ref(stack: jax.Array, op: BitOp) -> jax.Array:
@@ -15,13 +14,4 @@ def mws_reduce_ref(stack: jax.Array, op: BitOp) -> jax.Array:
     same dtype = op-reduction over the operand axis, complemented for the
     inverse-read ops (NAND/NOR/XNOR).
     """
-    base = op.base
-    if base is BitOp.AND:
-        out = jnp.bitwise_and.reduce(stack, axis=0)
-    elif base is BitOp.OR:
-        out = jnp.bitwise_or.reduce(stack, axis=0)
-    else:
-        out = jnp.bitwise_xor.reduce(stack, axis=0)
-    if op.inverted:
-        out = ~out
-    return out
+    return reduce_words(stack, op)

@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.bitops import BitOp
 from repro.kernels.mws.ops import _identity_word, _pad_to

@@ -1,0 +1,57 @@
+"""FlashQL: a batched bitmap-index query-serving subsystem.
+
+The paper's headline use case (§7) is BMI — bitmap-index analytics over
+hundreds of millions of users — but the seed repo only exposed raw bitwise
+expressions executed one plan at a time.  FlashQL closes the gap to a real
+query layer (cf. Perach et al., *Understanding Bulk-Bitwise PIM Through
+Database Analytics*):
+
+* :mod:`repro.query.ast` — a small predicate AST (``Eq``/``In``/``Range``
+  composed with ``And``/``Or``/``Not``) plus ``COUNT``/``MASK`` aggregation;
+* :mod:`repro.query.bitmap` — ``BitmapStore``: ingests columnar tables into
+  equality bitmaps and bit-sliced range indexes, ESP-programs them with the
+  paper's §6.3 placement rules;
+* :mod:`repro.query.compile` — lowers predicates to ``core.expr`` trees and
+  caches command plans by expression structure + leaf placement, so repeated
+  query shapes skip the Planner entirely;
+* :mod:`repro.query.device` — ``FlashDevice``: the vectorized multi-plane
+  engine; executes batches of structurally-identical plans with one
+  ``jax.vmap``-ed gather + fused-MWS program;
+* :mod:`repro.query.scheduler` — ``BatchScheduler``: admits concurrent
+  queries, groups them by plan shape, reports throughput/latency, and feeds
+  executed command shapes into :mod:`repro.flashsim` for full-scale time and
+  energy projection.
+"""
+
+from repro.query.ast import (
+    Agg,
+    And,
+    Eq,
+    In,
+    Not,
+    Or,
+    Query,
+    Range,
+)
+from repro.query.bitmap import BitmapStore
+from repro.query.compile import CompiledQuery, QueryCompiler, lower
+from repro.query.device import FlashDevice
+from repro.query.scheduler import BatchScheduler, QueryResult
+
+__all__ = [
+    "Agg",
+    "And",
+    "Eq",
+    "In",
+    "Not",
+    "Or",
+    "Query",
+    "Range",
+    "BitmapStore",
+    "CompiledQuery",
+    "QueryCompiler",
+    "lower",
+    "FlashDevice",
+    "BatchScheduler",
+    "QueryResult",
+]

@@ -1,0 +1,119 @@
+"""FlashQL predicate AST.
+
+A deliberately small relational-predicate language over one columnar table:
+leaf predicates select rows by column value (``Eq``, ``In``, ``Range``) and
+compose with ``And`` / ``Or`` / ``Not``; a :class:`Query` pairs a predicate
+with an aggregation — ``COUNT`` (the BMI bit-count) or ``MASK`` (the raw
+result bitmap).  Predicates support ``&``, ``|``, ``~`` like the core
+expression IR.
+
+Every node is frozen and hashable: the structural identity of a predicate
+is its plan-cache key (``repro.query.compile``).
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+
+class _PredOps:
+    def __and__(self, other: "Pred") -> "And":
+        return And(_flatten(And, (self, other)))
+
+    def __or__(self, other: "Pred") -> "Or":
+        return Or(_flatten(Or, (self, other)))
+
+    def __invert__(self) -> "Pred":
+        if isinstance(self, Not):
+            return self.child
+        return Not(self)
+
+
+@dataclass(frozen=True)
+class Eq(_PredOps):
+    """Rows where ``column == value``."""
+
+    column: str
+    value: int
+
+
+@dataclass(frozen=True)
+class In(_PredOps):
+    """Rows where ``column`` is any of ``values``."""
+
+    column: str
+    values: tuple[int, ...]
+
+    def __init__(self, column: str, values) -> None:
+        object.__setattr__(self, "column", column)
+        object.__setattr__(self, "values", tuple(sorted(set(values))))
+
+
+@dataclass(frozen=True)
+class Range(_PredOps):
+    """Rows where ``lo <= column <= hi`` (either bound may be None)."""
+
+    column: str
+    lo: int | None = None
+    hi: int | None = None
+
+    def __post_init__(self):
+        if self.lo is None and self.hi is None:
+            raise ValueError("Range needs at least one bound")
+
+
+@dataclass(frozen=True)
+class And(_PredOps):
+    children: tuple["Pred", ...]
+
+    def __init__(self, children) -> None:
+        object.__setattr__(self, "children", _flatten(And, children))
+
+
+@dataclass(frozen=True)
+class Or(_PredOps):
+    children: tuple["Pred", ...]
+
+    def __init__(self, children) -> None:
+        object.__setattr__(self, "children", _flatten(Or, children))
+
+
+@dataclass(frozen=True)
+class Not(_PredOps):
+    child: "Pred"
+
+
+Pred = Eq | In | Range | And | Or | Not
+
+
+def _flatten(cls, items) -> tuple["Pred", ...]:
+    out: list[Pred] = []
+    for it in items:
+        if isinstance(it, cls):
+            out.extend(it.children)
+        else:
+            out.append(it)
+    return tuple(out)
+
+
+class Agg(enum.Enum):
+    """Result aggregation: a row count or the selected-row bitmap itself."""
+
+    COUNT = "count"
+    MASK = "mask"
+
+
+@dataclass(frozen=True)
+class Query:
+    where: Pred
+    agg: Agg = Agg.COUNT
+    tag: str = field(default="", compare=False)  # free-form client label
+
+
+def and_(*preds: Pred) -> And:
+    return And(preds)
+
+
+def or_(*preds: Pred) -> Or:
+    return Or(preds)

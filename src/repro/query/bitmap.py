@@ -1,0 +1,155 @@
+"""Bitmap indexes over columnar tables, ESP-programmed into a flash array.
+
+Two index kinds per column (classic BMI organization, cf. O'Neil/Quass):
+
+* **equality bitmaps** — one page ``col=v`` per distinct value ``v``; bit
+  ``j`` is set iff row ``j`` has that value.  ``Eq`` is one page; ``In`` is
+  an OR over the member pages.
+* **bit-sliced index (BSI)** — one page ``col#b`` per bit position ``b`` of
+  the column's values; ``Range`` predicates evaluate with the bit-sliced
+  comparison network (``repro.query.compile``), needing only ``ceil(log2
+  max)`` pages regardless of cardinality.
+
+Placement follows the paper's §6.3 rules: pages first appearing in a warmup
+query are placed by :func:`repro.core.placement.auto_layout` (OR-context
+leaves stored inverted + co-located for De-Morgan single-sensing; AND/XOR
+context plain + co-located); remaining equality bitmaps are stored
+**inverted and co-located per column** — ``In`` over one column then
+resolves in a single inverse-read MWS, and cross-column ``And`` of inverse
+units De-Morgan-merges into one inter-block command — while BSI slices are
+stored plain + co-located.  Everything is ESP-programmed (`fc_write(...,
+esp=True)`), so query serving is error-free per the paper's reliability
+result.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitops import num_words, pack_bits
+from repro.query.ast import Query
+
+TRUE_PAGE = "__all"
+FALSE_PAGE = "__none"
+
+
+def eq_page(column: str, value: int) -> str:
+    return f"{column}={value}"
+
+
+def bsi_page(column: str, bit: int) -> str:
+    return f"{column}#{bit}"
+
+
+@dataclass(frozen=True)
+class ColumnIndex:
+    """Per-column metadata the compiler lowers predicates against."""
+
+    name: str
+    values: tuple[int, ...]  # distinct values present, sorted
+    bits: int  # BSI slice count = bit length of max value
+
+    @property
+    def max_value(self) -> int:
+        return self.values[-1] if self.values else 0
+
+
+@dataclass
+class BitmapStore:
+    """Ingests a columnar table; owns the logical bitmap pages."""
+
+    num_rows: int = 0
+    columns: dict[str, ColumnIndex] = field(default_factory=dict)
+    logical: dict[str, jax.Array] = field(default_factory=dict)  # packed
+    epoch: int = 0  # bumped per ingest; part of the plan-cache key
+
+    @property
+    def words(self) -> int:
+        return num_words(self.num_rows)
+
+    # -- ingest -------------------------------------------------------------
+    def ingest(self, table: dict[str, np.ndarray]) -> None:
+        """Build equality + BSI bitmaps for every column of ``table``.
+
+        Columns are 1-D arrays of non-negative integers, all equal length.
+        """
+        lengths = {len(v) for v in table.values()}
+        if len(lengths) != 1:
+            raise ValueError(f"ragged table: row counts {sorted(lengths)}")
+        (n,) = lengths
+        if self.num_rows and n != self.num_rows:
+            raise ValueError("all ingests must share one row count")
+        self.num_rows = n
+        self.epoch += 1
+
+        ones = jnp.asarray(
+            np.full((self.words,), 0xFFFFFFFF, dtype=np.uint32)
+        )
+        self.logical.setdefault(TRUE_PAGE, ones)
+        self.logical.setdefault(
+            FALSE_PAGE, jnp.zeros((self.words,), jnp.uint32)
+        )
+
+        for col, raw in table.items():
+            vals = np.asarray(raw)
+            if vals.min() < 0:
+                raise ValueError(f"column {col!r} has negative values")
+            distinct = np.unique(vals)
+            bits = max(int(distinct[-1]).bit_length(), 1)
+            self.columns[col] = ColumnIndex(
+                col, tuple(int(v) for v in distinct), bits
+            )
+            for v in distinct:
+                bitsarr = (vals == v).astype(np.uint8)
+                self.logical[eq_page(col, int(v))] = pack_bits(
+                    jnp.asarray(bitsarr)
+                )
+            for b in range(bits):
+                slice_bits = ((vals >> b) & 1).astype(np.uint8)
+                self.logical[bsi_page(col, b)] = pack_bits(
+                    jnp.asarray(slice_bits)
+                )
+
+    # -- program ------------------------------------------------------------
+    def program(self, array, warmup: Iterable[Query] = ()) -> None:
+        """ESP-program every bitmap page into ``array`` (§6.3 placement).
+
+        ``warmup`` queries steer placement: their lowered expressions run
+        through :func:`auto_layout` first, so hot query shapes get the
+        paper's context-sensitive inverted/plain co-location.  Pages no
+        warmup query touches fall back to the per-column defaults described
+        in the module docstring.
+        """
+        from repro.core.placement import auto_layout
+        from repro.query.compile import lower
+
+        layout = array.layout
+        for q in warmup:
+            auto_layout(lower(q.where, self), layout)
+
+        for col, ci in self.columns.items():
+            eq_new = [
+                eq_page(col, v)
+                for v in ci.values
+                if eq_page(col, v) not in layout
+            ]
+            if eq_new:
+                layout.place_colocated(eq_new, inverted=True)
+            bsi_new = [
+                bsi_page(col, b)
+                for b in range(ci.bits)
+                if bsi_page(col, b) not in layout
+            ]
+            if bsi_new:
+                layout.place_colocated(bsi_new, inverted=False)
+        for const in (TRUE_PAGE, FALSE_PAGE):
+            if const in self.logical and const not in layout:
+                layout.place_colocated([const], inverted=False)
+
+        for name, words in self.logical.items():
+            array.fc_write(name, words, esp=True)

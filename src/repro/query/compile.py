@@ -1,0 +1,167 @@
+"""Predicate -> core-expression lowering and the cached query compiler.
+
+Lowering rules:
+
+* ``Eq(col, v)``      -> the equality bitmap page ``col=v`` (FALSE if ``v``
+  never occurs);
+* ``In(col, vs)``     -> OR over the member pages — one inverse-read MWS
+  when the column's bitmaps are co-located inverted (§6.3);
+* ``Range(col, lo, hi)`` -> the bit-sliced comparison network over the
+  column's BSI pages (O'Neil/Quass ``v <= c``: walk slices MSB->LSB keeping
+  an equality prefix, OR the strictly-less branches);
+* ``And`` / ``Or`` / ``Not`` -> ``and_`` / ``or_`` / ``not_``.
+
+The compiler memoizes :class:`CommandPlan`s keyed on **expression structure
++ leaf placement** (+ the store's ingest epoch): repeated query shapes skip
+the Planner, and — because structurally identical plans gather the same
+slot patterns — land in the same vectorized batch of
+:class:`repro.query.device.FlashDevice`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.commands import CommandPlan
+from repro.core.expr import Expr, Node, Page, and_, leaves, not_, or_
+from repro.core.placement import auto_layout
+from repro.core.planner import Planner
+from repro.query.ast import And, Eq, In, Not, Or, Pred, Query, Range
+from repro.query.bitmap import (
+    FALSE_PAGE,
+    TRUE_PAGE,
+    BitmapStore,
+    bsi_page,
+    eq_page,
+)
+
+
+def _le_expr(store: BitmapStore, column: str, c: int) -> Expr:
+    """Bit-sliced ``column <= c`` over the column's BSI pages."""
+    ci = store.columns[column]
+    if c < 0:
+        return Page(FALSE_PAGE)
+    if c >= (1 << ci.bits) - 1:
+        return Page(TRUE_PAGE)
+    lt_terms: list[Expr] = []
+    eq_prefix: list[Expr] = []
+    for b in range(ci.bits - 1, -1, -1):
+        s = Page(bsi_page(column, b))
+        if (c >> b) & 1:
+            lt_terms.append(
+                and_(*eq_prefix, not_(s)) if eq_prefix else not_(s)
+            )
+            eq_prefix.append(s)
+        else:
+            eq_prefix.append(not_(s))
+    eq = and_(*eq_prefix) if len(eq_prefix) > 1 else eq_prefix[0]
+    return or_(*lt_terms, eq) if lt_terms else eq
+
+
+def lower(pred: Pred, store: BitmapStore) -> Expr:
+    """Lower a FlashQL predicate to a ``core.expr`` tree over bitmap pages."""
+    if isinstance(pred, Eq):
+        ci = store.columns.get(pred.column)
+        if ci is None:
+            raise KeyError(f"unknown column {pred.column!r}")
+        if pred.value not in ci.values:
+            return Page(FALSE_PAGE)
+        return Page(eq_page(pred.column, pred.value))
+    if isinstance(pred, In):
+        ci = store.columns.get(pred.column)
+        if ci is None:
+            raise KeyError(f"unknown column {pred.column!r}")
+        members = [
+            Page(eq_page(pred.column, v))
+            for v in pred.values
+            if v in ci.values
+        ]
+        if not members:
+            return Page(FALSE_PAGE)
+        if len(members) == 1:
+            return members[0]
+        return or_(*members)
+    if isinstance(pred, Range):
+        ci = store.columns.get(pred.column)
+        if ci is None:
+            raise KeyError(f"unknown column {pred.column!r}")
+        le_hi = (
+            _le_expr(store, pred.column, pred.hi)
+            if pred.hi is not None
+            else Page(TRUE_PAGE)
+        )
+        ge_lo = (
+            not_(_le_expr(store, pred.column, pred.lo - 1))
+            if pred.lo is not None and pred.lo > 0
+            else Page(TRUE_PAGE)
+        )
+        factors = [
+            f
+            for f in (le_hi, ge_lo)
+            if not (isinstance(f, Page) and f.name == TRUE_PAGE)
+        ]
+        if not factors:
+            return Page(TRUE_PAGE)
+        if len(factors) == 1:
+            return factors[0]
+        return and_(*factors)
+    if isinstance(pred, Not):
+        return not_(lower(pred.child, store))
+    if isinstance(pred, And):
+        return and_(*(lower(c, store) for c in pred.children))
+    if isinstance(pred, Or):
+        return or_(*(lower(c, store) for c in pred.children))
+    raise TypeError(f"not a FlashQL predicate: {pred!r}")
+
+
+def expr_key(e: Expr) -> tuple:
+    """Canonical structural key of a core expression."""
+    if isinstance(e, Page):
+        return ("p", e.name)
+    assert isinstance(e, Node)
+    return (e.op.value,) + tuple(expr_key(c) for c in e.children)
+
+
+@dataclass(frozen=True)
+class CompiledQuery:
+    query: Query
+    expr: Expr
+    plan: CommandPlan
+    key: tuple
+    cache_hit: bool
+
+
+@dataclass
+class QueryCompiler:
+    """Lower + plan queries against one array, memoizing command plans."""
+
+    store: BitmapStore
+    array: "object"  # FlashArray / FlashDevice (duck-typed: .layout)
+    _plans: dict[tuple, CommandPlan] = field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+
+    def compile(self, query: Query) -> CompiledQuery:
+        expr = lower(query.where, self.store)
+        layout = self.array.layout
+        if any(p.name not in layout for p in leaves(expr)):
+            # late-placed pages (e.g. constants written after warmup) get
+            # the §6.3 context-sensitive placement before planning
+            auto_layout(expr, layout)
+        placements = tuple(
+            (p.name, layout[p.name]) for p in sorted(set(leaves(expr)), key=lambda p: p.name)
+        )
+        key = (expr_key(expr), placements, self.store.epoch)
+        plan = self._plans.get(key)
+        hit = plan is not None
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+            plan = Planner(layout).compile(expr)
+            self._plans[key] = plan
+        return CompiledQuery(query, expr, plan, key, hit)
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._plans)

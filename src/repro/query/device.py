@@ -1,0 +1,214 @@
+"""FlashDevice: the vectorized multi-plane batch-execution engine.
+
+A :class:`repro.core.engine.FlashArray` executes one plan at a time with a
+Python loop over commands.  ``FlashDevice`` extends it for query serving:
+
+* the page store is packed ``(planes, pages, words_per_plane)`` (see
+  :class:`repro.core.store.PackedStore`) — a logical bit vector is striped
+  across ``num_planes`` planes exactly like the paper's SSD stripes a
+  800M-user bitmap, and because planes are word-axis shards, ONE fused
+  ``mws_reduce`` dispatch senses a command on every plane at once;
+* a :class:`CommandPlan` compiles to an :class:`ExecPlan`: per MWS command
+  a static ``(blocks, wordlines)`` slot-index array (ragged wordline sets
+  padded with the store's all-ones identity slot) plus the static ISCM
+  flags.  Executing is then pure array code — gather, fused reduce, latch
+  algebra — with **no Python-level per-page work**;
+* plans with identical *signatures* (same command structure and shapes,
+  different slot indices) execute as one batch under ``jax.vmap``: the
+  whole batch becomes a handful of kernel dispatches regardless of batch
+  size.  Runners are jitted and cached per signature.
+
+Plans that spill (ESP-program scratch pages mid-plan) mutate the store and
+fall back to the eager :meth:`FlashArray.execute` path, which since the
+packed-store refactor also senses via gather + fused reduce.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.commands import (
+    CommandPlan,
+    ESPCommand,
+    MWSCommand,
+    SpillCommand,
+    TransferCommand,
+    XORCommand,
+)
+from repro.core.engine import FlashArray, fused_block_reduce
+from repro.core.store import IDENTITY_SLOT, PackedStore
+
+
+@dataclass(frozen=True)
+class _Step:
+    """Static (trace-time) part of one executable command."""
+
+    kind: str  # "mws" | "xor" | "xfer"
+    inverse: bool = False
+    init_s: bool = True
+    init_c: bool = True
+    move: bool = False
+    source: str = "C"
+    invert: bool = False
+    shape: tuple[int, int] = (0, 0)  # (blocks, padded wordlines) for "mws"
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    """A CommandPlan lowered to gather indices + static step descriptors."""
+
+    steps: tuple[_Step, ...]
+    idxs: tuple[np.ndarray, ...]  # one (blocks, wordlines) array per MWS
+
+    @property
+    def signature(self) -> tuple[_Step, ...]:
+        """Batch key: two plans with equal signatures vmap together."""
+        return self.steps
+
+
+@dataclass
+class FlashDevice(FlashArray):
+    """Multi-plane Flash-Cosmos device with batched plan execution."""
+
+    num_planes: int = 4
+    _runners: dict = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        if self.store.planes != self.num_planes:
+            if len(self.store):
+                raise ValueError(
+                    "cannot re-stripe a non-empty store; construct the "
+                    "device with store=PackedStore(planes=num_planes)"
+                )
+            self.store = PackedStore(planes=self.num_planes)
+
+    # -- plan lowering -----------------------------------------------------
+    def build_exec(self, plan: CommandPlan) -> ExecPlan | None:
+        """Lower to an ExecPlan, or None if the plan spills (not batchable)."""
+        if plan.num_spills:
+            return None
+        steps: list[_Step] = []
+        idxs: list[np.ndarray] = []
+        for cmd in plan.commands:
+            if isinstance(cmd, MWSCommand):
+                n_max = max(len(t.wordlines) for t in cmd.targets)
+                idx = np.full(
+                    (len(cmd.targets), n_max), IDENTITY_SLOT, dtype=np.int32
+                )
+                for bi, t in enumerate(cmd.targets):
+                    for wi, wl in enumerate(t.wordlines):
+                        name = self.layout.page_at(t.block, wl)
+                        idx[bi, wi] = self.store.slot(name)
+                steps.append(
+                    _Step(
+                        "mws",
+                        inverse=cmd.iscm.inverse_read,
+                        init_s=cmd.iscm.init_s_latch,
+                        init_c=cmd.iscm.init_c_latch,
+                        move=cmd.iscm.move_s_to_c,
+                        shape=(len(cmd.targets), n_max),
+                    )
+                )
+                idxs.append(idx)
+            elif isinstance(cmd, XORCommand):
+                steps.append(_Step("xor"))
+            elif isinstance(cmd, TransferCommand):
+                steps.append(
+                    _Step("xfer", source=cmd.source, invert=cmd.invert)
+                )
+            elif isinstance(cmd, (SpillCommand, ESPCommand)):
+                raise AssertionError("spill-free plan expected")
+        return ExecPlan(tuple(steps), tuple(idxs))
+
+    # -- batched execution -------------------------------------------------
+    def _runner(self, signature: tuple[_Step, ...]):
+        fn = self._runners.get(signature)
+        if fn is not None:
+            return fn
+        interpret = self.interpret
+
+        def run_one(data: jax.Array, *idxs: jax.Array) -> jax.Array:
+            s = c = out = None
+            it = iter(idxs)
+            for st in signature:
+                if st.kind == "mws":
+                    cube = data[next(it)]  # (blocks, wordlines, words)
+                    raw = fused_block_reduce(
+                        cube, st.inverse, interpret=interpret
+                    )
+                    s = raw if (st.init_s or s is None) else s & raw
+                    if st.init_c:
+                        c = None
+                    if st.move:
+                        c = s if c is None else c | s
+                elif st.kind == "xor":
+                    c = s ^ c
+                else:
+                    val = s if st.source == "S" else c
+                    out = ~val if st.invert else val
+            assert out is not None, "plan missing TransferCommand"
+            return out
+
+        n_mws = sum(1 for st in signature if st.kind == "mws")
+        fn = jax.jit(
+            jax.vmap(run_one, in_axes=(None,) + (0,) * n_mws)
+        )
+        self._runners[signature] = fn
+        return fn
+
+    def execute_batch(
+        self,
+        plans: list[CommandPlan],
+        seed: int = 0,
+        execs: list[ExecPlan | None] | None = None,
+    ) -> list[jax.Array]:
+        """Execute independent plans, vectorizing structurally-equal ones.
+
+        Returns per-plan logical result words, in input order.  The batch
+        path never injects read errors, so every page a batched plan senses
+        must be ESP-programmed (`fc_write` default) — unrelated non-ESP
+        pages are fine; spilling plans run eagerly one by one.  Pass
+        ``execs`` (from :meth:`build_exec`) to skip re-lowering.
+        """
+        if execs is None:
+            execs = [self.build_exec(p) for p in plans]
+        noisy_slots = {
+            self.store.slot(n) for n in self._non_esp if n in self.store
+        }
+        if noisy_slots:
+            for e in execs:
+                if e is not None and any(
+                    bool(np.isin(idx, list(noisy_slots)).any())
+                    for idx in e.idxs
+                ):
+                    raise ValueError(
+                        "batched execution senses a non-ESP page; "
+                        "reprogram it with esp=True or execute eagerly"
+                    )
+        groups: dict[tuple, list[int]] = {}
+        for i, e in enumerate(execs):
+            if e is not None:
+                groups.setdefault(e.signature, []).append(i)
+
+        results: list[jax.Array | None] = [None] * len(plans)
+        w = self.store.num_words
+        if groups:
+            data = self.store.snapshot()
+            for signature, members in groups.items():
+                stacked = [
+                    jnp.asarray(
+                        np.stack([execs[i].idxs[s] for i in members])
+                    )
+                    for s in range(len(execs[members[0]].idxs))
+                ]
+                out = self._runner(signature)(data, *stacked)  # (B, Wp)
+                for row, i in enumerate(members):
+                    results[i] = out[row, :w]
+        for i, e in enumerate(execs):
+            if e is None:  # spilling plan: eager fallback
+                results[i] = self.execute(plans[i], seed=seed + i)
+        return results  # type: ignore[return-value]

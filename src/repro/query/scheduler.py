@@ -1,0 +1,215 @@
+"""BatchScheduler: admission, shape-grouped batching, and stats/projection.
+
+The serving loop of FlashQL: clients ``submit`` queries (tickets), and
+``flush`` compiles the pending set through the plan cache, hands the plans
+to :class:`FlashDevice.execute_batch` (structurally-identical plans execute
+as one ``jax.vmap`` batch), applies the aggregation — ``COUNT`` runs ONE
+batched popcount kernel over all result bitmaps of the flush — and returns
+per-ticket results with latency.
+
+The scheduler also records every executed MWS command's shape
+(:class:`repro.flashsim.workloads.MWSCommandShape`), so ``projection()``
+can replay the served traffic through the paper's full-scale SSD model and
+report projected wall-clock time and energy on real NAND-flash hardware
+(Table-1 geometry), next to the OSP baseline.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitops import BitVector, valid_mask
+from repro.core.commands import MWSCommand
+from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
+from repro.flashsim.platforms import Platform, run_workload
+from repro.flashsim.workloads import BulkBitwiseWorkload, MWSCommandShape
+from repro.kernels.popcount import popcount
+from repro.query.ast import Agg, Query
+from repro.query.bitmap import BitmapStore
+from repro.query.compile import QueryCompiler
+from repro.query.device import FlashDevice
+
+
+@dataclass(frozen=True)
+class QueryResult:
+    ticket: int
+    query: Query
+    count: int | None  # Agg.COUNT
+    mask: BitVector | None  # Agg.MASK
+    latency_s: float
+    cache_hit: bool
+
+    @property
+    def value(self):
+        return self.count if self.count is not None else self.mask
+
+
+@dataclass
+class BatchScheduler:
+    device: FlashDevice
+    store: BitmapStore
+    max_batch: int = 256
+    compiler: QueryCompiler = None  # type: ignore[assignment]
+
+    _pending: list[tuple[int, Query, float]] = field(default_factory=list)
+    _next_ticket: int = 0
+    # -- stats --------------------------------------------------------------
+    queries_served: int = 0
+    flushes: int = 0
+    vmap_batches: int = 0
+    eager_plans: int = 0
+    serve_time_s: float = 0.0
+    total_latency_s: float = 0.0
+    # executed traffic, aggregated per command shape (bounded memory even
+    # for a long-running service); wordlines tracked exactly because ragged
+    # commands pad to max_wls_per_block and must not inflate operand counts
+    command_shape_counts: Counter = field(default_factory=Counter)
+    wordlines_sensed: int = 0
+    _any_count_agg: bool = False
+    # ExecPlans memoized under the compiler's plan-cache key: a cache hit
+    # skips the Python-side lowering entirely, not just the Planner
+    _exec_cache: dict = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        if self.compiler is None:
+            self.compiler = QueryCompiler(self.store, self.device)
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, query: Query) -> int:
+        """Admit a query; returns its ticket.  Queries execute on the next
+        ``flush()`` (or ``serve()``), ``max_batch`` at a time."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, query, time.perf_counter()))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # -- serving -------------------------------------------------------------
+    def flush(self) -> dict[int, QueryResult]:
+        """Compile, batch-execute, and aggregate all pending queries."""
+        if not self._pending:
+            return {}
+        batch, self._pending = (
+            self._pending[: self.max_batch],
+            self._pending[self.max_batch :],
+        )
+        t0 = time.perf_counter()
+        compiled = [self.compiler.compile(q) for _, q, _ in batch]
+        plans = [c.plan for c in compiled]
+        execs = []
+        for cq in compiled:
+            if cq.key not in self._exec_cache:
+                self._exec_cache[cq.key] = self.device.build_exec(cq.plan)
+            execs.append(self._exec_cache[cq.key])
+        masks = self.device.execute_batch(plans, execs=execs)
+
+        mask_words = jnp.asarray(valid_mask(self.store.num_rows))
+        stacked = jnp.stack(masks) & mask_words  # (B, W), padding zeroed
+        counts = None
+        if any(q.agg is Agg.COUNT for _, q, _ in batch):
+            counts = popcount(stacked, interpret=self.device.interpret)
+
+        # force device work before timestamping, or qps/latency would only
+        # measure the Python-side dispatch
+        jax.block_until_ready(stacked if counts is None else counts)
+        t1 = time.perf_counter()
+        results: dict[int, QueryResult] = {}
+        for i, ((ticket, q, t_submit), cq) in enumerate(zip(batch, compiled)):
+            count = mask = None
+            if q.agg is Agg.COUNT:
+                count = int(counts[i])
+                self._any_count_agg = True
+            else:
+                mask = BitVector(stacked[i], self.store.num_rows)
+            results[ticket] = QueryResult(
+                ticket, q, count, mask, t1 - t_submit, cq.cache_hit
+            )
+            self.total_latency_s += t1 - t_submit
+            for cmd in cq.plan.commands:
+                if isinstance(cmd, MWSCommand):
+                    self.command_shape_counts[
+                        MWSCommandShape(
+                            n_blocks=cmd.num_blocks,
+                            max_wls_per_block=max(
+                                len(t.wordlines) for t in cmd.targets
+                            ),
+                        )
+                    ] += 1
+                    self.wordlines_sensed += cmd.num_wordlines
+
+        self.queries_served += len(batch)
+        self.flushes += 1
+        self.vmap_batches += len(
+            {e.signature for e in execs if e is not None}
+        )
+        self.eager_plans += sum(1 for e in execs if e is None)
+        self.serve_time_s += t1 - t0
+        return results
+
+    def serve(self, queries: list[Query]) -> list[QueryResult]:
+        """Submit + flush until drained; results in submission order."""
+        tickets = [self.submit(q) for q in queries]
+        results: dict[int, QueryResult] = {}
+        while self._pending:
+            results.update(self.flush())
+        return [results[t] for t in tickets]
+
+    # -- reporting -----------------------------------------------------------
+    def stats(self) -> dict:
+        served = max(self.queries_served, 1)
+        return {
+            "queries_served": self.queries_served,
+            "flushes": self.flushes,
+            "vmap_batches": self.vmap_batches,
+            "eager_plans": self.eager_plans,
+            "plan_cache_hits": self.compiler.hits,
+            "plan_cache_misses": self.compiler.misses,
+            "plan_cache_size": self.compiler.cache_size,
+            "queries_per_sec": (
+                self.queries_served / self.serve_time_s
+                if self.serve_time_s
+                else float("inf")
+            ),
+            "mean_latency_s": self.total_latency_s / served,
+            "mws_commands": sum(self.command_shape_counts.values()),
+        }
+
+    def projection(self, ssd: SSDConfig = DEFAULT_SSD) -> dict:
+        """Full-scale SSD time/energy projection of the served traffic.
+
+        Replays every executed MWS command shape through the paper's timing
+        and energy model at Table-1 geometry, with the result bitmaps of all
+        served queries streamed out — reported next to the outside-storage
+        (OSP) baseline that would sense and ship every operand page.
+        """
+        if not self.command_shape_counts:
+            raise ValueError("no traffic served yet")
+        wl = BulkBitwiseWorkload(
+            name=f"flashql({self.queries_served}q)",
+            num_operands=self.wordlines_sensed,
+            operand_bits=self.store.num_rows,
+            result_bits=self.store.num_rows * self.queries_served,
+            num_queries=1,  # shape counts already cover ALL served queries
+            host_postprocess=self._any_count_agg,
+            fc_command_counts=tuple(self.command_shape_counts.items()),
+            fc_sensing_ops=sum(self.command_shape_counts.values()),
+        )
+        fc = run_workload(wl, Platform.FC, ssd)
+        osp = run_workload(wl, Platform.OSP, ssd)
+        return {
+            "workload": wl.name,
+            "fc_time_s": fc.time_s,
+            "fc_energy_j": fc.energy_j,
+            "osp_time_s": osp.time_s,
+            "osp_energy_j": osp.energy_j,
+            "speedup_vs_osp": osp.time_s / fc.time_s,
+            "energy_ratio_vs_osp": osp.energy_j / fc.energy_j,
+        }

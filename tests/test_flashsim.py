@@ -1,8 +1,7 @@
 """FlashSim: timing/power anchors and platform-model invariants."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis optional
 
 from repro.flashsim import (
     DEFAULT_SSD,

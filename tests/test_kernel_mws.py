@@ -7,8 +7,7 @@ the kernel body on CPU; the BlockSpec tiling logic is exercised for real).
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis optional
 
 from repro.core.bitops import BitOp, pack_bits, reduce_words, unpack_bits
 from repro.kernels.mws import mws_reduce, mws_reduce_ref, parabit_reduce

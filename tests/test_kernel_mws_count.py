@@ -3,8 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis optional
 
 from repro.core.bitops import BitOp
 from repro.kernels.mws_count import mws_count, mws_count_ref

@@ -4,13 +4,12 @@ right number of sensing operations — including the paper's Fig. 16 example."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis optional
 
 from repro.core.commands import ISCM, MAX_INTER_BLOCKS, MWSCommand
 from repro.core.engine import FlashArray, eval_expr
 from repro.core.expr import Page, and_, nand_, nor_, not_, or_, xnor_, xor_
-from repro.core.placement import Layout, auto_layout
+from repro.core.placement import auto_layout
 from repro.core.planner import Planner
 
 W = 16  # words per page in these tests

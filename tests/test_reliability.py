@@ -5,14 +5,11 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis optional
 
 from repro.core.bitops import BitOp
 from repro.core.reliability import (
     ESP_ZERO_TESP,
-    REF_PEC,
-    REF_RETENTION_DAYS,
     UBER_TARGET,
     CellMode,
     ProgramConfig,
