@@ -85,6 +85,18 @@ class Layout:
             dict(self._by_location),
         )
 
+    def fork(self) -> "Layout":
+        """Independent copy with identical placements (shard-local layouts).
+
+        Sharded serving programs every shard device from one canonical
+        layout: forks start bit-identical, so per-shard compiled plans share
+        gather shapes (and hence vmap signatures) across the fleet, while
+        later spill allocations stay local to each shard.
+        """
+        other = Layout(wls_per_block=self.wls_per_block)
+        other.restore(self.snapshot())
+        return other
+
     def restore(self, snap: tuple) -> None:
         (
             self.placements,

@@ -11,7 +11,10 @@ Python-level reduce per page.
 
 Slot 0 is reserved for an all-ones row: the AND identity used to pad the
 ragged per-block wordline sets of an inter-block MWS to a rectangle, so a
-whole command batch reduces in a single Pallas call.
+whole command batch reduces in a single Pallas call.  Slot 1 is the dual
+all-zeros row: a block whose first wordline gathers slot 1 ANDs to zero and
+is therefore OR-neutral across blocks — plan-aware batching uses it to pad
+a plan with fewer target blocks into a wider signature's shape.
 
 Writes append to a host-side ``numpy`` buffer (amortized doubling); the
 device-side ``jax`` snapshot is materialized lazily and invalidated on
@@ -27,8 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 
 IDENTITY_SLOT = 0  # all-ones row (AND identity / pad row), always present
+ZERO_SLOT = 1  # all-zeros row (OR identity: pads whole blocks), always present
 
 _ONES = np.uint32(0xFFFFFFFF)
+_SCRATCH_PREFIX = "__scratch"
 
 
 @dataclass
@@ -47,6 +52,12 @@ class PackedStore:
     _n: int = 0
     _words: int | None = None  # logical words per page (pre-padding)
     _snapshot: jax.Array | None = None
+    # Mutation epoch: bumped whenever page *content* changes (new page or
+    # reprogram), except planner scratch pages — those are plan-internal
+    # temporaries rewritten on every execution of a spilling plan and never
+    # invalidate any compiled plan.  Plan caches key on this so mutating one
+    # device's store recompiles only that device's plans.
+    epoch: int = 0
 
     # -- geometry ----------------------------------------------------------
     @property
@@ -80,8 +91,9 @@ class PackedStore:
         self._words = words
         wp = self.padded_words
         self._buf = np.empty((16, wp), dtype=np.uint32)
-        self._buf[0] = _ONES  # identity row
-        self._n = 1
+        self._buf[IDENTITY_SLOT] = _ONES  # AND identity row
+        self._buf[ZERO_SLOT] = 0  # OR identity row (block padding)
+        self._n = 2
 
     def __setitem__(self, name: str, words) -> None:
         w = np.asarray(words, dtype=np.uint32).reshape(-1)
@@ -107,6 +119,8 @@ class PackedStore:
             self._slots[name] = slot
         self._buf[slot] = row
         self._snapshot = None
+        if not name.startswith(_SCRATCH_PREFIX):
+            self.epoch += 1
 
     # -- reads -------------------------------------------------------------
     def slot(self, name: str) -> int:

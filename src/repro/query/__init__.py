@@ -20,7 +20,12 @@ Database Analytics*):
 * :mod:`repro.query.scheduler` — ``BatchScheduler``: admits concurrent
   queries, groups them by plan shape, reports throughput/latency, and feeds
   executed command shapes into :mod:`repro.flashsim` for full-scale time and
-  energy projection.
+  energy projection;
+* :mod:`repro.query.shard` — ``ShardedBitmapStore`` / ``ShardedFlashQL``:
+  rows striped over a fleet of devices, queries scattered to per-shard plan
+  caches, shard batches fused under one ``jit(vmap)`` per signature group,
+  partial results gathered (summed popcounts / un-striped bitmaps) with a
+  multi-chip time/energy projection.
 """
 
 from repro.query.ast import (
@@ -37,6 +42,11 @@ from repro.query.bitmap import BitmapStore
 from repro.query.compile import CompiledQuery, QueryCompiler, lower
 from repro.query.device import FlashDevice
 from repro.query.scheduler import BatchScheduler, QueryResult
+from repro.query.shard import (
+    ShardedBitmapStore,
+    ShardedFlashQL,
+    build_sharded_flashql,
+)
 
 __all__ = [
     "Agg",
@@ -54,4 +64,7 @@ __all__ = [
     "FlashDevice",
     "BatchScheduler",
     "QueryResult",
+    "ShardedBitmapStore",
+    "ShardedFlashQL",
+    "build_sharded_flashql",
 ]

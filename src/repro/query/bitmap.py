@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitops import num_words, pack_bits
+from repro.core.bitops import num_words, pack_bits, valid_mask
 from repro.query.ast import Query
 
 TRUE_PAGE = "__all"
@@ -67,16 +67,38 @@ class BitmapStore:
     columns: dict[str, ColumnIndex] = field(default_factory=dict)
     logical: dict[str, jax.Array] = field(default_factory=dict)  # packed
     epoch: int = 0  # bumped per ingest; part of the plan-cache key
+    # Sharded stores pad every page to a fleet-wide word count so shard
+    # snapshots stack under one vmap; padding bits are zero and masked out
+    # of every aggregation (see valid_words_mask).
+    min_words: int = 0
 
     @property
     def words(self) -> int:
-        return num_words(self.num_rows)
+        return max(num_words(self.num_rows), self.min_words)
+
+    def valid_words_mask(self) -> np.ndarray:
+        """Per-word mask of real rows: zeros in the last word's slack bits
+        AND in any whole padding word beyond ``num_rows``."""
+        mask = np.zeros((self.words,), dtype=np.uint32)
+        mask[: num_words(self.num_rows)] = valid_mask(self.num_rows)
+        return mask
 
     # -- ingest -------------------------------------------------------------
-    def ingest(self, table: dict[str, np.ndarray]) -> None:
+    def ingest(
+        self,
+        table: dict[str, np.ndarray],
+        schema: dict[str, tuple[int, ...]] | None = None,
+    ) -> None:
         """Build equality + BSI bitmaps for every column of ``table``.
 
         Columns are 1-D arrays of non-negative integers, all equal length.
+
+        ``schema`` optionally forces each column's distinct-value set (a
+        superset of the values actually present).  A sharded store ingests
+        every shard with the *global* schema: values absent from a shard
+        still get (all-zero) equality pages and the BSI width matches the
+        global maximum, so predicate lowering, placement, and hence plan
+        signatures are identical on every shard.
         """
         lengths = {len(v) for v in table.values()}
         if len(lengths) != 1:
@@ -87,48 +109,67 @@ class BitmapStore:
         self.num_rows = n
         self.epoch += 1
 
-        ones = jnp.asarray(
-            np.full((self.words,), 0xFFFFFFFF, dtype=np.uint32)
-        )
-        self.logical.setdefault(TRUE_PAGE, ones)
+        ones = np.zeros((self.words,), dtype=np.uint32)
+        ones[: num_words(n)] = valid_mask(n)
+        self.logical.setdefault(TRUE_PAGE, jnp.asarray(ones))
         self.logical.setdefault(
             FALSE_PAGE, jnp.zeros((self.words,), jnp.uint32)
         )
 
         for col, raw in table.items():
             vals = np.asarray(raw)
-            if vals.min() < 0:
+            if n and vals.min() < 0:
                 raise ValueError(f"column {col!r} has negative values")
-            distinct = np.unique(vals)
-            bits = max(int(distinct[-1]).bit_length(), 1)
+            if schema is not None:
+                distinct = np.asarray(schema[col])
+                missing = np.setdiff1d(vals, distinct)
+                if missing.size:
+                    raise ValueError(
+                        f"column {col!r} has values {missing[:5]} outside "
+                        "the forced schema"
+                    )
+            else:
+                distinct = np.unique(vals)
+            bits = (
+                max(int(distinct[-1]).bit_length(), 1)
+                if distinct.size
+                else 1
+            )
             self.columns[col] = ColumnIndex(
                 col, tuple(int(v) for v in distinct), bits
             )
             for v in distinct:
                 bitsarr = (vals == v).astype(np.uint8)
-                self.logical[eq_page(col, int(v))] = pack_bits(
-                    jnp.asarray(bitsarr)
-                )
+                self.logical[eq_page(col, int(v))] = self._pack(bitsarr)
             for b in range(bits):
                 slice_bits = ((vals >> b) & 1).astype(np.uint8)
-                self.logical[bsi_page(col, b)] = pack_bits(
-                    jnp.asarray(slice_bits)
-                )
+                self.logical[bsi_page(col, b)] = self._pack(slice_bits)
+
+    def _pack(self, bits: np.ndarray) -> jax.Array:
+        """Pack a row-bit array, zero-padding words up to ``self.words``."""
+        packed = pack_bits(jnp.asarray(bits))
+        pad = self.words - packed.shape[-1]
+        if pad:
+            packed = jnp.concatenate(
+                [packed, jnp.zeros((pad,), jnp.uint32)]
+            )
+        return packed
 
     # -- program ------------------------------------------------------------
-    def program(self, array, warmup: Iterable[Query] = ()) -> None:
-        """ESP-program every bitmap page into ``array`` (§6.3 placement).
+    def place_into(self, layout, warmup: Iterable[Query] = ()) -> None:
+        """Compute §6.3 placements for every bitmap page into ``layout``.
 
         ``warmup`` queries steer placement: their lowered expressions run
         through :func:`auto_layout` first, so hot query shapes get the
         paper's context-sensitive inverted/plain co-location.  Pages no
         warmup query touches fall back to the per-column defaults described
-        in the module docstring.
+        in the module docstring.  Pages already placed are left alone, so a
+        sharded deployment can compute one canonical layout and fork it per
+        device (``Layout.fork``).
         """
         from repro.core.placement import auto_layout
         from repro.query.compile import lower
 
-        layout = array.layout
         for q in warmup:
             auto_layout(lower(q.where, self), layout)
 
@@ -151,5 +192,8 @@ class BitmapStore:
             if const in self.logical and const not in layout:
                 layout.place_colocated([const], inverted=False)
 
+    def program(self, array, warmup: Iterable[Query] = ()) -> None:
+        """ESP-program every bitmap page into ``array`` (§6.3 placement)."""
+        self.place_into(array.layout, warmup=warmup)
         for name, words in self.logical.items():
             array.fc_write(name, words, esp=True)

@@ -20,7 +20,7 @@ slot patterns — land in the same vectorized batch of
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from repro.core.commands import CommandPlan
 from repro.core.expr import Expr, Node, Page, and_, leaves, not_, or_
@@ -140,8 +140,27 @@ class QueryCompiler:
     _plans: dict[tuple, CommandPlan] = field(default_factory=dict)
     hits: int = 0
     misses: int = 0
+    _live_epochs: tuple | None = None
+    # front cache keyed on the (frozen, hashable) Query itself: repeated
+    # queries skip lowering + structural keying entirely, not just the
+    # Planner.  Cleared whenever either epoch moves.
+    _by_query: dict = field(default_factory=dict, repr=False)
 
     def compile(self, query: Query) -> CompiledQuery:
+        epochs = (self.store.epoch, self.array.store.epoch)
+        if epochs != self._live_epochs:
+            # an epoch bump leaves every prior-generation entry permanently
+            # unreachable; evict them so long-running serving with periodic
+            # reprograms doesn't grow the caches one plan set per mutation
+            self._plans = {
+                k: v for k, v in self._plans.items() if k[2:] == epochs
+            }
+            self._by_query.clear()
+            self._live_epochs = epochs
+        cached = self._by_query.get(query)
+        if cached is not None:
+            self.hits += 1
+            return cached
         expr = lower(query.where, self.store)
         layout = self.array.layout
         if any(p.name not in layout for p in leaves(expr)):
@@ -151,7 +170,12 @@ class QueryCompiler:
         placements = tuple(
             (p.name, layout[p.name]) for p in sorted(set(leaves(expr)), key=lambda p: p.name)
         )
-        key = (expr_key(expr), placements, self.store.epoch)
+        # Two epochs key the cache: the BitmapStore's ingest epoch (distinct
+        # values / lowering may change) and the device PackedStore's mutation
+        # epoch (page contents reprogrammed).  The latter is per *device*, so
+        # in a sharded deployment mutating one shard invalidates only that
+        # shard's plans while the other shards' caches stay warm.
+        key = (expr_key(expr), placements) + epochs
         plan = self._plans.get(key)
         hit = plan is not None
         if hit:
@@ -160,7 +184,11 @@ class QueryCompiler:
             self.misses += 1
             plan = Planner(layout).compile(expr)
             self._plans[key] = plan
-        return CompiledQuery(query, expr, plan, key, hit)
+        cq = CompiledQuery(query, expr, plan, key, hit)
+        if len(self._by_query) >= 4096:  # bound high-cardinality params
+            self._by_query.clear()
+        self._by_query[query] = replace(cq, cache_hit=True)
+        return cq
 
     @property
     def cache_size(self) -> int:

