@@ -25,10 +25,23 @@ def popcount(
     interpret: bool = True,
 ) -> jax.Array:
     """Population count per row. (W,)->() or (R, W)->(R,); zero-pads freely
-    (padding words contribute 0 to the count)."""
+    (padding words contribute 0 to the count).
+
+    With ``interpret=True`` (no TPU) the Pallas interpreter walks the grid
+    in Python — milliseconds per block, which would dominate batched
+    aggregation — so emulation counts with plain XLA ops instead
+    (bit-identical to the kernel: the kernel tests assert exactly that);
+    on real hardware (``interpret=False``) the Pallas kernel is
+    dispatched.
+    """
     squeeze = words.ndim == 1
     if squeeze:
         words = words[None]
+    if interpret:
+        out = jnp.sum(
+            jax.lax.population_count(words).astype(jnp.int32), axis=-1
+        )
+        return out[0] if squeeze else out
     r, w = words.shape
     block_rows = min(block_rows, max(1, r))
     rp = -(-r // block_rows) * block_rows

@@ -7,7 +7,12 @@ query layer (cf. Perach et al., *Understanding Bulk-Bitwise PIM Through
 Database Analytics*):
 
 * :mod:`repro.query.ast` — a small predicate AST (``Eq``/``In``/``Range``
-  composed with ``And``/``Or``/``Not``) plus ``COUNT``/``MASK`` aggregation;
+  composed with ``And``/``Or``/``Not``) plus aggregate specs
+  (``Count``/``Mask``/``Sum``/``Avg``/``Min``/``Max``/``TopK``/``GroupBy``);
+* :mod:`repro.query.aggregate` — the pluggable aggregation pipeline: each
+  spec maps to an ``Aggregator`` declaring its extra sensed planes (BSI
+  slices / equality bitmaps), a batched jit'd weighted-popcount reduce,
+  and a shard-merge rule;
 * :mod:`repro.query.bitmap` — ``BitmapStore``: ingests columnar tables into
   equality bitmaps and bit-sliced range indexes, ESP-programs them with the
   paper's §6.3 placement rules;
@@ -22,21 +27,35 @@ Database Analytics*):
   executed command shapes into :mod:`repro.flashsim` for full-scale time and
   energy projection;
 * :mod:`repro.query.shard` — ``ShardedBitmapStore`` / ``ShardedFlashQL``:
-  rows striped over a fleet of devices, queries scattered to per-shard plan
-  caches, shard batches fused under one ``jit(vmap)`` per signature group,
-  partial results gathered (summed popcounts / un-striped bitmaps) with a
-  multi-chip time/energy projection.
+  rows striped over a fleet of devices (optionally sorted by a
+  ``stripe_key`` so range queries route to few shards), queries scattered
+  to per-shard plan caches, shard batches fused under one ``jit(vmap)``
+  per signature group, partial results gathered through each aggregate's
+  shard-merge rule with a multi-chip time/energy projection.
 """
 
+from repro.query.aggregate import (
+    Aggregator,
+    get_aggregator,
+    validate_query,
+)
 from repro.query.ast import (
     Agg,
     And,
+    Avg,
+    Count,
     Eq,
+    GroupBy,
     In,
+    Mask,
+    Max,
+    Min,
     Not,
     Or,
     Query,
     Range,
+    Sum,
+    TopK,
 )
 from repro.query.bitmap import BitmapStore
 from repro.query.compile import CompiledQuery, QueryCompiler, lower
@@ -50,13 +69,24 @@ from repro.query.shard import (
 
 __all__ = [
     "Agg",
+    "Aggregator",
     "And",
+    "Avg",
+    "Count",
     "Eq",
+    "GroupBy",
     "In",
+    "Mask",
+    "Max",
+    "Min",
     "Not",
     "Or",
     "Query",
     "Range",
+    "Sum",
+    "TopK",
+    "get_aggregator",
+    "validate_query",
     "BitmapStore",
     "CompiledQuery",
     "QueryCompiler",

@@ -1,14 +1,25 @@
-"""FlashQL predicate AST.
+"""FlashQL predicate AST and aggregate specs.
 
 A deliberately small relational-predicate language over one columnar table:
 leaf predicates select rows by column value (``Eq``, ``In``, ``Range``) and
 compose with ``And`` / ``Or`` / ``Not``; a :class:`Query` pairs a predicate
-with an aggregation — ``COUNT`` (the BMI bit-count) or ``MASK`` (the raw
-result bitmap).  Predicates support ``&``, ``|``, ``~`` like the core
-expression IR.
+with an *aggregate spec* describing what to compute over the selected rows:
+
+* ``Count()`` / ``Mask()`` — the BMI bit-count / the raw result bitmap;
+* ``Sum(col)`` / ``Avg(col)`` / ``Min(col)`` / ``Max(col)`` — bit-sliced
+  arithmetic over the column's BSI slices (weighted popcounts);
+* ``TopK(col, k)`` — the k most frequent values of ``col`` among selected
+  rows (per-value popcounts over the equality bitmaps);
+* ``GroupBy(key, value)`` — per-group aggregation (``Count``/``Sum``/
+  ``Avg``) keyed on a low-cardinality column's equality bitmaps.
+
+The legacy ``Agg.COUNT`` / ``Agg.MASK`` enum members keep working and
+normalize to ``Count()`` / ``Mask()`` (see :func:`normalize_agg`); the
+execution semantics of every spec live in :mod:`repro.query.aggregate`.
+Predicates support ``&``, ``|``, ``~`` like the core expression IR.
 
 Every node is frozen and hashable: the structural identity of a predicate
-is its plan-cache key (``repro.query.compile``).
+(and of its aggregate spec) is its plan-cache key (``repro.query.compile``).
 """
 
 from __future__ import annotations
@@ -97,17 +108,106 @@ def _flatten(cls, items) -> tuple["Pred", ...]:
     return tuple(out)
 
 
+def columns_of(pred: Pred):
+    """Yield every column name a predicate references (with repeats)."""
+    if isinstance(pred, (Eq, In, Range)):
+        yield pred.column
+    elif isinstance(pred, Not):
+        yield from columns_of(pred.child)
+    elif isinstance(pred, (And, Or)):
+        for c in pred.children:
+            yield from columns_of(c)
+    else:
+        raise TypeError(f"not a FlashQL predicate: {pred!r}")
+
+
 class Agg(enum.Enum):
-    """Result aggregation: a row count or the selected-row bitmap itself."""
+    """Legacy aggregation enum; normalizes to ``Count()`` / ``Mask()``."""
 
     COUNT = "count"
     MASK = "mask"
 
 
 @dataclass(frozen=True)
+class Count:
+    """Number of selected rows (the BMI bit-count)."""
+
+
+@dataclass(frozen=True)
+class Mask:
+    """The selected-row bitmap itself, as a :class:`BitVector`."""
+
+
+@dataclass(frozen=True)
+class Sum:
+    """Exact integer ``sum(column)`` over selected rows, computed as the
+    weighted popcount Σ_b 2^b · popcount(mask ∧ slice_b) over BSI slices."""
+
+    column: str
+
+
+@dataclass(frozen=True)
+class Avg:
+    """``sum(column) / count`` over selected rows (None if none selected);
+    the numerator is the exact-integer :class:`Sum`."""
+
+    column: str
+
+
+@dataclass(frozen=True)
+class Min:
+    """Minimum ``column`` value among selected rows (None if empty); walks
+    the BSI slices MSB→LSB narrowing a candidate mask."""
+
+    column: str
+
+
+@dataclass(frozen=True)
+class Max:
+    """Maximum ``column`` value among selected rows (None if empty)."""
+
+    column: str
+
+
+@dataclass(frozen=True)
+class TopK:
+    """The ``k`` most frequent values of ``column`` among selected rows as
+    ``((value, count), ...)`` sorted by (-count, value); ties break toward
+    the smaller value, deterministically across shard merges."""
+
+    column: str
+    k: int
+
+
+@dataclass(frozen=True)
+class GroupBy:
+    """Per-group aggregation over the groups of a low-cardinality ``key``
+    column: ``{value: aggregate}`` for every group with at least one
+    selected row.  ``value`` may be ``Count()``, ``Sum(col)``, or
+    ``Avg(col)``."""
+
+    key: str
+    value: "Count | Sum | Avg" = Count()
+
+
+AggSpec = Count | Mask | Sum | Avg | Min | Max | TopK | GroupBy
+
+
+def normalize_agg(agg: "Agg | AggSpec") -> AggSpec:
+    """Map the legacy ``Agg`` enum onto spec instances; pass specs through."""
+    if agg is Agg.COUNT:
+        return Count()
+    if agg is Agg.MASK:
+        return Mask()
+    if isinstance(agg, AggSpec):
+        return agg
+    raise TypeError(f"not an aggregate spec: {agg!r}")
+
+
+@dataclass(frozen=True)
 class Query:
     where: Pred
-    agg: Agg = Agg.COUNT
+    agg: "Agg | AggSpec" = Agg.COUNT
     tag: str = field(default="", compare=False)  # free-form client label
 
 

@@ -46,6 +46,28 @@ def bsi_page(column: str, bit: int) -> str:
     return f"{column}#{bit}"
 
 
+def bsi_pages(store: "BitmapStore", column: str) -> tuple[str, ...]:
+    """Every BSI slice page of ``column``, LSB first (slice b = bit b)."""
+    ci = store.columns[column]
+    return tuple(bsi_page(column, b) for b in range(ci.bits))
+
+
+def eq_pages(store: "BitmapStore", column: str) -> tuple[str, ...]:
+    """Every equality-bitmap page of ``column``, in sorted value order."""
+    ci = store.columns[column]
+    return tuple(eq_page(column, v) for v in ci.values)
+
+
+def fetch_pages(store: "BitmapStore", names: tuple[str, ...]) -> jax.Array:
+    """Stack logical pages into one ``(len(names), words)`` device array.
+
+    This is how aggregators read their extra sensed planes (BSI slices /
+    equality bitmaps): the logical pages, like everything ESP-programmed
+    into the array, are error-free per the paper's reliability result.
+    """
+    return jnp.stack([store.logical[n] for n in names])
+
+
 @dataclass(frozen=True)
 class ColumnIndex:
     """Per-column metadata the compiler lowers predicates against."""

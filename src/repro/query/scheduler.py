@@ -3,9 +3,12 @@
 The serving loop of FlashQL: clients ``submit`` queries (tickets), and
 ``flush`` compiles the pending set through the plan cache, hands the plans
 to :class:`FlashDevice.execute_batch` (structurally-identical plans execute
-as one ``jax.vmap`` batch), applies the aggregation — ``COUNT`` runs ONE
-batched popcount kernel over all result bitmaps of the flush — and returns
-per-ticket results with latency.
+as one ``jax.vmap`` batch), applies the aggregation through the pluggable
+:class:`repro.query.aggregate.Aggregator` pipeline — every aggregate kind
+in the flush reduces with ONE jit'd (weighted-)popcount dispatch per
+reduce signature, e.g. ``COUNT`` is one batched popcount over all result
+bitmaps and ``SUM`` one weighted popcount over the stacked BSI slices —
+and returns per-ticket results with latency.
 
 The scheduler also records every executed MWS command's shape
 (:class:`repro.flashsim.workloads.MWSCommandShape`), so ``projection()``
@@ -22,18 +25,24 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.bitops import BitVector
 from repro.core.commands import MWSCommand
 from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
 from repro.flashsim.platforms import Platform, run_workload
 from repro.flashsim.workloads import BulkBitwiseWorkload, MWSCommandShape
-from repro.kernels.popcount import popcount
-from repro.query.ast import Agg, Query
+from repro.query.aggregate import (
+    get_aggregator,
+    reduce_flush,
+    validate_query,
+)
+from repro.query.ast import Count, Mask, Query, normalize_agg
 from repro.query.bitmap import BitmapStore
 from repro.query.compile import QueryCompiler
 from repro.query.device import FlashDevice
+
+# one extra sensed plane (a BSI slice / equality bitmap read for an
+# aggregate) = one single-wordline sensing in the SSD projection
+AGG_READ_SHAPE = MWSCommandShape(n_blocks=1, max_wls_per_block=1)
 
 
 def prune_stale_execs(cache: dict, epochs: tuple[int, int]) -> None:
@@ -116,14 +125,20 @@ def project_traffic(
 class QueryResult:
     ticket: int
     query: Query
-    count: int | None  # Agg.COUNT
-    mask: BitVector | None  # Agg.MASK
+    value: object  # the aggregate's final value (int, float, BitVector, …)
     latency_s: float
     cache_hit: bool
 
+    # legacy accessors: COUNT/MASK callers predate the aggregate pipeline
     @property
-    def value(self):
-        return self.count if self.count is not None else self.mask
+    def count(self) -> int | None:
+        spec = normalize_agg(self.query.agg)
+        return self.value if isinstance(spec, Count) else None
+
+    @property
+    def mask(self):
+        spec = normalize_agg(self.query.agg)
+        return self.value if isinstance(spec, Mask) else None
 
 
 @dataclass
@@ -147,10 +162,15 @@ class BatchScheduler:
     # commands pad to max_wls_per_block and must not inflate operand counts
     command_shape_counts: Counter = field(default_factory=Counter)
     wordlines_sensed: int = 0
-    _any_count_agg: bool = False
+    _host_postprocess: bool = False
     # ExecPlans memoized under the compiler's plan-cache key: a cache hit
     # skips the Python-side lowering entirely, not just the Planner
     _exec_cache: dict = field(default_factory=dict, repr=False)
+    # stacked extra sensed planes (BSI slices / equality bitmaps) per
+    # (store epoch, page tuple) — see repro.query.aggregate.reduce_flush
+    _extras_cache: dict = field(default_factory=dict, repr=False)
+    # device-resident valid-row word mask, memoized per ingest epoch
+    _mask_cache: tuple | None = field(default=None, repr=False)
 
     def __post_init__(self):
         if self.compiler is None:
@@ -159,7 +179,13 @@ class BatchScheduler:
     # -- admission ----------------------------------------------------------
     def submit(self, query: Query) -> int:
         """Admit a query; returns its ticket.  Queries execute on the next
-        ``flush()`` (or ``serve()``), ``max_batch`` at a time."""
+        ``flush()`` (or ``serve()``), ``max_batch`` at a time.
+
+        Validation (predicate columns + the aggregate's target columns)
+        happens here, so a bad query raises immediately instead of
+        poisoning a later flush.
+        """
+        validate_query(query, self.store.columns)
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append((ticket, query, time.perf_counter()))
@@ -187,7 +213,12 @@ class BatchScheduler:
                 prune_stale_execs(self._exec_cache, cq.key[2:])
                 self._exec_cache[cq.key] = self.device.build_exec(cq.plan)
             execs.append(self._exec_cache[cq.key])
-        mask_words = jnp.asarray(self.store.valid_words_mask())
+        if self._mask_cache is None or self._mask_cache[0] != self.store.epoch:
+            self._mask_cache = (
+                self.store.epoch,
+                jnp.asarray(self.store.valid_words_mask()),
+            )
+        mask_words = self._mask_cache[1]
         stacked = (
             self.device.execute_batch_stacked(
                 plans,
@@ -198,12 +229,20 @@ class BatchScheduler:
             )
             & mask_words
         )  # (B, W), padding zeroed
-        counts = None
-        if any(q.agg is Agg.COUNT for _, q, _ in batch):
-            # one batched popcount + ONE host transfer for the whole flush
-            counts = np.asarray(
-                popcount(stacked, interpret=self.device.interpret)
-            )
+
+        # aggregate: one jit'd (weighted-)popcount reduce + one host
+        # transfer per reduce signature, whatever mix of kinds the flush
+        # holds (repro.query.aggregate)
+        queries = [q for _, q, _ in batch]
+        aggs = [get_aggregator(q.agg) for q in queries]
+        partials, extra_counts = reduce_flush(
+            stacked,
+            [q.agg for q in queries],
+            [self.store] * len(queries),
+            [self.store.epoch] * len(queries),
+            interpret=self.device.interpret,
+            extras_cache=self._extras_cache,
+        )
 
         # force device work before timestamping, or qps/latency would only
         # measure the Python-side dispatch
@@ -211,19 +250,25 @@ class BatchScheduler:
         t1 = time.perf_counter()
         results: dict[int, QueryResult] = {}
         for i, ((ticket, q, t_submit), cq) in enumerate(zip(batch, compiled)):
-            count = mask = None
-            if q.agg is Agg.COUNT:
-                count = int(counts[i])
-                self._any_count_agg = True
-            else:
-                mask = BitVector(stacked[i], self.store.num_rows)
+            agg = aggs[i]
+            self._host_postprocess |= agg.host_postprocess
             results[ticket] = QueryResult(
-                ticket, q, count, mask, t1 - t_submit, cq.cache_hit
+                ticket,
+                q,
+                agg.finalize(partials[i], self.store),
+                t1 - t_submit,
+                cq.cache_hit,
             )
             self.total_latency_s += t1 - t_submit
             self.wordlines_sensed += record_plan_traffic(
                 self.command_shape_counts, cq.plan
             )
+            # each extra plane the aggregate sensed (a BSI slice or an
+            # equality bitmap) is one single-wordline read in the
+            # projected traffic
+            if extra_counts[i]:
+                self.command_shape_counts[AGG_READ_SHAPE] += extra_counts[i]
+                self.wordlines_sensed += extra_counts[i]
 
         self.queries_served += len(batch)
         self.flushes += 1
@@ -273,7 +318,7 @@ class BatchScheduler:
             wordlines_sensed=self.wordlines_sensed,
             num_rows=self.store.num_rows,
             num_queries=self.queries_served,
-            host_postprocess=self._any_count_agg,
+            host_postprocess=self._host_postprocess,
             ssd=ssd,
             name=f"flashql({self.queries_served}q)",
         )

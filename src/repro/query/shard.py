@@ -19,11 +19,21 @@ independent :class:`repro.query.device.FlashDevice`s — round-robin
   variance — shard fan-out does not multiply the vmap group count.  Each
   batch element gathers from its own shard's snapshot of the stacked
   fleet array;
-* **gather** — ``COUNT`` sums per-shard popcounts (one batched popcount
-  per flush); ``MASK`` un-stripes per-shard bitmaps back into global row
-  order.  The all-ones identity rows that pad ragged gathers, the packed
-  word slack, and the fleet-width padding words of the last (short)
-  stripe are all masked out via each shard's ``valid_words_mask``.
+* **gather** — every aggregate flows through the pluggable
+  :class:`repro.query.aggregate.Aggregator` pipeline: shard batches reduce
+  device-side (one jit'd weighted-popcount per reduce signature), and each
+  aggregate's shard-merge rule combines the partials — ``COUNT``/``SUM``
+  sum, ``MIN``/``MAX`` take the extremum, ``TOP-K``/``GROUP BY`` merge
+  per-value count vectors (the global schema aligns value order across
+  shards), ``MASK`` un-stripes bitmaps back into global row order.  The
+  all-ones identity rows that pad ragged gathers, the packed word slack,
+  and the fleet-width padding words of the last (short) stripe are all
+  masked out via each shard's ``valid_words_mask``;
+* **routing** — a ``range``-striped store (optionally ``stripe_key``-sorted
+  so stripes hold disjoint key ranges) prunes shards whose stripe provably
+  cannot match the query root (an ``Eq``/``In``/``Range`` conjunct with no
+  overlapping values on that shard) *before* scatter: the shard never
+  senses, and its partial is the aggregate's empty value.
 
 ``projection()`` replays each device's executed traffic through the
 flashsim timing/energy model and aggregates over the fleet — wall-clock
@@ -32,6 +42,7 @@ as the max over concurrently-serving chips, energy as the sum.
 
 from __future__ import annotations
 
+import bisect
 import time
 from collections import Counter
 from dataclasses import dataclass, field
@@ -41,12 +52,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitops import BitVector, pack_bits, unpack_bits
 from repro.core.bitops import num_words as _num_words
 from repro.core.placement import Layout
 from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
-from repro.kernels.popcount import popcount
-from repro.query.ast import Agg, Query
+from repro.query.aggregate import (
+    get_aggregator,
+    reduce_flush,
+    validate_query,
+)
+from repro.query.ast import And, Eq, In, Or, Pred, Query, Range
 from repro.query.bitmap import BitmapStore
 from repro.query.compile import QueryCompiler
 from repro.query.device import (
@@ -56,6 +70,7 @@ from repro.query.device import (
     reorder_rows,
 )
 from repro.query.scheduler import (
+    AGG_READ_SHAPE,
     QueryResult,
     project_traffic,
     prune_stale_execs,
@@ -89,6 +104,47 @@ def stripe_rows(
     raise ValueError(f"unknown stripe policy {policy!r}; use {POLICIES}")
 
 
+def shard_cannot_match(
+    pred: Pred, values: dict[str, tuple[int, ...]]
+) -> bool:
+    """Conservatively prove ``pred`` selects no rows on a shard that holds
+    exactly the (sorted) per-column distinct ``values``.
+
+    Sound, not complete: ``True`` means the shard's stripe provably cannot
+    match (the result is empty there, no sensing needed); ``False`` means
+    "might match".  ``Not`` is never pruned through — its complement could
+    match anything — and ``And``/``Or`` prune if any / every child does.
+    This is what makes ``Range``/``Eq`` roots route on a range-striped,
+    ``stripe_key``-sorted store: stripes hold disjoint key ranges, so most
+    shards fail the overlap test.
+    """
+    if isinstance(pred, Eq):
+        vs = values.get(pred.column, ())
+        i = bisect.bisect_left(vs, pred.value)
+        return not (i < len(vs) and vs[i] == pred.value)
+    if isinstance(pred, In):
+        return all(
+            shard_cannot_match(Eq(pred.column, v), values)
+            for v in pred.values
+        )
+    if isinstance(pred, Range):
+        vs = values.get(pred.column, ())
+        i = (
+            bisect.bisect_left(vs, pred.lo)
+            if pred.lo is not None
+            else 0
+        )
+        # no shard value >= lo, or the smallest such value exceeds hi
+        return i >= len(vs) or (
+            pred.hi is not None and vs[i] > pred.hi
+        )
+    if isinstance(pred, And):
+        return any(shard_cannot_match(c, values) for c in pred.children)
+    if isinstance(pred, Or):
+        return all(shard_cannot_match(c, values) for c in pred.children)
+    return False  # Not: conservatively assume it can match
+
+
 @dataclass
 class ShardedBitmapStore:
     """Row-striped bitmap index over ``num_shards`` shard-local stores.
@@ -98,14 +154,27 @@ class ShardedBitmapStore:
     gets an all-zero equality page there: predicate lowering, placement,
     plan-cache keys, and vmap signatures line up across the fleet.  Pages
     are zero-padded to a fleet-wide word count so shard snapshots stack.
+
+    ``stripe_key`` (``range`` policy only) orders rows by that column's
+    value before cutting contiguous stripes, so each shard holds a
+    disjoint key range and ``Range``/``Eq`` queries on the key route to
+    few shards (see :meth:`ShardedFlashQL.submit`).  Global row order —
+    what ``MASK`` results and ``row_maps`` refer to — stays the table's
+    ingest order.
     """
 
     num_shards: int
     policy: str = "roundrobin"
+    stripe_key: str | None = None
     shards: list[BitmapStore] = field(default_factory=list)
     row_maps: list[np.ndarray] = field(default_factory=list)
     num_rows: int = 0
     schema: dict[str, tuple[int, ...]] = field(default_factory=dict)
+    # values actually PRESENT on each shard (the shard-local stores carry
+    # the forced global schema, so routing needs this recorded separately)
+    shard_values: list[dict[str, tuple[int, ...]]] = field(
+        default_factory=list
+    )
 
     def __post_init__(self):
         if self.num_shards < 1:
@@ -114,6 +183,8 @@ class ShardedBitmapStore:
             raise ValueError(
                 f"unknown stripe policy {self.policy!r}; use {POLICIES}"
             )
+        if self.stripe_key is not None and self.policy != "range":
+            raise ValueError("stripe_key requires policy='range'")
         if not self.shards:
             self.shards = [BitmapStore() for _ in range(self.num_shards)]
 
@@ -136,18 +207,37 @@ class ShardedBitmapStore:
             col: tuple(int(v) for v in np.unique(np.asarray(vals)))
             for col, vals in table.items()
         }
-        self.row_maps = stripe_rows(n, self.num_shards, self.policy)
+        if self.stripe_key is not None:
+            if self.stripe_key not in table:
+                raise KeyError(
+                    f"stripe_key {self.stripe_key!r} not in table"
+                )
+            # contiguous stripes over the key-sorted order: each shard
+            # holds a disjoint (sorted) key range, which is what makes
+            # range routing prune; row_maps keep global (ingest) indices
+            order = np.argsort(
+                np.asarray(table[self.stripe_key]), kind="stable"
+            )
+            self.row_maps = [
+                order[chunk]
+                for chunk in stripe_rows(n, self.num_shards, "range")
+            ]
+        else:
+            self.row_maps = stripe_rows(n, self.num_shards, self.policy)
         fleet_words = max(
             (_num_words(len(rows)) for rows in self.row_maps), default=0
         )
-        for store, rows in zip(self.shards, self.row_maps):
+        self.shard_values = [{} for _ in range(self.num_shards)]
+        for s, (store, rows) in enumerate(zip(self.shards, self.row_maps)):
             if not len(rows):
                 continue
+            sub = {col: np.asarray(v)[rows] for col, v in table.items()}
+            self.shard_values[s] = {
+                col: tuple(int(v) for v in np.unique(vals))
+                for col, vals in sub.items()
+            }
             store.min_words = fleet_words
-            store.ingest(
-                {col: np.asarray(v)[rows] for col, v in table.items()},
-                schema=self.schema,
-            )
+            store.ingest(sub, schema=self.schema)
 
     # -- program ------------------------------------------------------------
     def program(
@@ -205,6 +295,9 @@ class ShardedFlashQL:
     # shard indices, and device-resident gather idxs per batch composition
     _group_cache: dict = field(default_factory=dict, repr=False)
     _maskmat_cache: dict = field(default_factory=dict, repr=False)
+    # stacked extra sensed planes per (shard, epoch, page tuple) — see
+    # repro.query.aggregate.reduce_flush
+    _extras_cache: dict = field(default_factory=dict, repr=False)
 
     # -- stats --------------------------------------------------------------
     queries_served: int = 0
@@ -213,11 +306,12 @@ class ShardedFlashQL:
     distinct_signatures: int = 0  # exact signatures seen (pre-padding)
     eager_plans: int = 0
     fused_flushes: int = 0
+    shards_pruned: int = 0  # stripe-routing prunes (shard never sensed)
     serve_time_s: float = 0.0
     total_latency_s: float = 0.0
     shard_traffic: list[Counter] = field(default_factory=list)
     shard_wordlines: list[int] = field(default_factory=list)
-    _any_count_agg: bool = False
+    _host_postprocess: bool = False
 
     def __post_init__(self):
         if len(self.devices) != self.store.num_shards:
@@ -235,32 +329,39 @@ class ShardedFlashQL:
         self.shard_wordlines = [0] * self.store.num_shards
 
     # -- admission ----------------------------------------------------------
-    def _check_columns(self, pred) -> None:
-        """Reject unknown columns at admission: a compile error inside
-        ``flush`` would otherwise fire after some shard queues were popped,
-        leaving the fleet's queues out of lockstep (a poisoned ticket)."""
-        from repro.query.ast import And, Eq, In, Not, Or, Range
-
-        if isinstance(pred, (Eq, In, Range)):
-            if pred.column not in self.store.schema:
-                raise KeyError(f"unknown column {pred.column!r}")
-        elif isinstance(pred, Not):
-            self._check_columns(pred.child)
-        elif isinstance(pred, (And, Or)):
-            for c in pred.children:
-                self._check_columns(c)
-
     def submit(self, query: Query) -> int:
         """Admit a query: it is scattered to every active shard's queue and
-        executes on the next ``flush()``."""
-        self._check_columns(query.where)
+        executes on the next ``flush()``.
+
+        Validation (predicate columns + the aggregate's target columns,
+        via :func:`repro.query.aggregate.validate_query`) happens here: a
+        compile error inside ``flush`` would fire after some shard queues
+        were popped, leaving the fleet's queues out of lockstep (a
+        poisoned ticket).
+
+        Shards whose stripe provably cannot match the query root
+        (:func:`shard_cannot_match` against the values actually present on
+        the stripe) are pruned *before* scatter: they never sense a page,
+        and their partial is the aggregate's empty value.  On a
+        ``range``-striped store with a ``stripe_key`` this routes
+        key-range queries to the few shards holding the range.
+        """
+        agg = validate_query(query, self.store.schema)
         ticket = self._next_ticket
         self._next_ticket += 1
         self._meta[ticket] = (query, time.perf_counter())
         self._partials[ticket] = {}
         self._cache_hits[ticket] = True
         for s in self.store.active:
-            self._queues[s].append((ticket, query))
+            if shard_cannot_match(
+                query.where, self.store.shard_values[s]
+            ):
+                self._partials[ticket][s] = agg.empty_partial(
+                    self.store.shards[s]
+                )
+                self.shards_pruned += 1
+            else:
+                self._queues[s].append((ticket, query))
         return ticket
 
     @property
@@ -310,9 +411,14 @@ class ShardedFlashQL:
     # -- serving -------------------------------------------------------------
     def flush(self) -> dict[int, QueryResult]:
         """Drain up to ``queue_depth`` queries per shard, execute every
-        shard batch, and gather completed tickets."""
+        shard batch, reduce aggregates device-side, and gather completed
+        tickets — including tickets completed purely by stripe routing
+        (every shard pruned at ``submit``, nothing left to execute)."""
         active = [s for s in self.store.active if self._queues[s]]
-        if not active:
+        expected = len(self.store.active)
+        if not active and not any(
+            len(p) == expected for p in self._partials.values()
+        ):
             return {}
         t0 = time.perf_counter()
 
@@ -339,120 +445,127 @@ class ShardedFlashQL:
                     self.shard_traffic[s], cq.plan
                 )
 
-        # execute: fused cross-shard vmap groups where snapshots stack.
-        # Group outputs are concatenated and re-ordered with ONE gather —
-        # per-item jax slicing would cost O(shards x batch) dispatches and
-        # dominate serving time at realistic batch sizes.
-        execs = [e for _, _, e in items]
-        self.distinct_signatures += len(
-            {e.signature for e in execs if e is not None}
-        )
-        fleet_w = self.store.shards[active[0]].words
-        pieces: list[jax.Array] = []  # (B_g, fleet_w) per group
-        order: list[int] = []  # item index per output row
-        data = self._snapshots_stack(active)
-        if data is not None:
-            cache_key = (tuple(active),) + tuple(keys)
-            prepared = self._group_cache.get(cache_key)
-            if prepared is None:
-                prepared = []
-                for signature, members, stacked in group_execs(
-                    execs, pad=True
-                ):
-                    sids = np.array(
-                        [items[i][0] for i in members], np.int32
+        if items:
+            # execute: fused cross-shard vmap groups where snapshots stack.
+            # Group outputs are concatenated and re-ordered with ONE gather —
+            # per-item jax slicing would cost O(shards x batch) dispatches
+            # and dominate serving time at realistic batch sizes.
+            execs = [e for _, _, e in items]
+            self.distinct_signatures += len(
+                {e.signature for e in execs if e is not None}
+            )
+            fleet_w = self.store.shards[active[0]].words
+            pieces: list[jax.Array] = []  # (B_g, fleet_w) per group
+            order: list[int] = []  # item index per output row
+            data = self._snapshots_stack(active)
+            if data is not None:
+                cache_key = (tuple(active),) + tuple(keys)
+                prepared = self._group_cache.get(cache_key)
+                if prepared is None:
+                    prepared = []
+                    for signature, members, stacked in group_execs(
+                        execs, pad=True
+                    ):
+                        sids = np.array(
+                            [items[i][0] for i in members], np.int32
+                        )
+                        fleet_ix = jnp.asarray(
+                            np.searchsorted(
+                                np.asarray(active, np.int32), sids
+                            ).astype(np.int32)
+                        )
+                        prepared.append(
+                            (
+                                signature,
+                                fleet_ix,
+                                tuple(jnp.asarray(x) for x in stacked),
+                                members,
+                            )
+                        )
+                    if len(self._group_cache) >= 64:
+                        self._group_cache.clear()
+                    self._group_cache[cache_key] = prepared
+                self.signature_groups += len(prepared)
+                for signature, fleet_ix, idxs, members in prepared:
+                    out = self._sharded_runner(signature)(
+                        data, fleet_ix, *idxs
                     )
-                    fleet_ix = jnp.asarray(
-                        np.searchsorted(
-                            np.asarray(active, np.int32), sids
-                        ).astype(np.int32)
-                    )
-                    prepared.append(
-                        (
-                            signature,
-                            fleet_ix,
-                            tuple(jnp.asarray(x) for x in stacked),
-                            members,
+                    pieces.append(out[:, :fleet_w])
+                    order.extend(members)
+                for i, (s, _, e) in enumerate(items):
+                    if e is None:  # spilling plan: eager per-device fallback
+                        pieces.append(
+                            self.devices[s].execute(plans[i])[None]
+                        )
+                        order.append(i)
+                        self.eager_plans += 1
+                self.fused_flushes += 1
+            else:
+                # per-device fallback: each shard runs its own vmap batches
+                for s in active:
+                    ix = [i for i, it in enumerate(items) if it[0] == s]
+                    pieces.append(
+                        self.devices[s].execute_batch_stacked(
+                            [plans[i] for i in ix],
+                            execs=[execs[i] for i in ix],
+                            batch_key=tuple(keys[i] for i in ix),
                         )
                     )
-                if len(self._group_cache) >= 64:
-                    self._group_cache.clear()
-                self._group_cache[cache_key] = prepared
-            self.signature_groups += len(prepared)
-            for signature, fleet_ix, idxs, members in prepared:
-                out = self._sharded_runner(signature)(
-                    data, fleet_ix, *idxs
-                )
-                pieces.append(out[:, :fleet_w])
-                order.extend(members)
-            for i, (s, _, e) in enumerate(items):
-                if e is None:  # spilling plan: eager per-device fallback
-                    pieces.append(self.devices[s].execute(plans[i])[None])
-                    order.append(i)
-                    self.eager_plans += 1
-            self.fused_flushes += 1
-        else:
-            # per-device fallback: each shard runs its own vmap batches
-            for s in active:
-                ix = [i for i, it in enumerate(items) if it[0] == s]
-                pieces.append(
-                    self.devices[s].execute_batch_stacked(
-                        [plans[i] for i in ix],
-                        execs=[execs[i] for i in ix],
-                        batch_key=tuple(keys[i] for i in ix),
+                    order.extend(ix)
+                    self.signature_groups += self.devices[
+                        s
+                    ].last_signature_groups
+                    self.eager_plans += sum(
+                        1 for i in ix if execs[i] is None
                     )
-                )
-                order.extend(ix)
-                self.signature_groups += self.devices[
-                    s
-                ].last_signature_groups
-                self.eager_plans += sum(
-                    1 for i in ix if execs[i] is None
-                )
-        allout = reorder_rows(pieces, order)
+            allout = reorder_rows(pieces, order)
 
-        # gather: mask shard partials (identity pad rows, word slack, and
-        # fleet-width padding of short stripes), batch-popcount, merge
-        masked = allout & self._mask_matrix(tuple(s for s, _, _ in items))
-        counts_np = masked_np = None
-        aggs = [self._meta[t][0].agg for _, t, _ in items]
-        if any(a is Agg.COUNT for a in aggs):
-            # one batched popcount + one host transfer for the whole flush
-            counts_np = np.asarray(
-                popcount(masked, interpret=self.devices[0].interpret)
+            # reduce: mask shard partials (identity pad rows, word slack,
+            # and fleet-width padding of short stripes), then one jit'd
+            # (weighted-)popcount reduce + one host transfer per reduce
+            # signature across the whole flush, any mix of aggregate kinds
+            masked = allout & self._mask_matrix(
+                tuple(s for s, _, _ in items)
             )
-        if any(a is Agg.MASK for a in aggs):
-            masked_np = np.asarray(masked)
-        jax.block_until_ready(masked)
+            specs = [self._meta[t][0].agg for _, t, _ in items]
+            partials, extra_counts = reduce_flush(
+                masked,
+                specs,
+                [self.store.shards[s] for s, _, _ in items],
+                [
+                    (s, self.store.shards[s].epoch)
+                    for s, _, _ in items
+                ],
+                interpret=self.devices[0].interpret,
+                extras_cache=self._extras_cache,
+            )
+            jax.block_until_ready(masked)
 
-        for i, (s, ticket, _) in enumerate(items):
-            self._partials[ticket][s] = (
-                int(counts_np[i])
-                if aggs[i] is Agg.COUNT
-                else masked_np[i]
-            )
+            for i, (s, ticket, _) in enumerate(items):
+                self._partials[ticket][s] = partials[i]
+                # extra planes the aggregate sensed on this shard (BSI
+                # slices / equality bitmaps): single-wordline reads in
+                # the projected traffic
+                if extra_counts[i]:
+                    self.shard_traffic[s][AGG_READ_SHAPE] += extra_counts[i]
+                    self.shard_wordlines[s] += extra_counts[i]
 
         t1 = time.perf_counter()
         results: dict[int, QueryResult] = {}
         done = [
             t
             for t in list(self._partials)
-            if len(self._partials[t]) == len(self.store.active)
+            if len(self._partials[t]) == expected
         ]
         for ticket in done:
             q, t_submit = self._meta.pop(ticket)
             parts = self._partials.pop(ticket)
-            count = mask = None
-            if q.agg is Agg.COUNT:
-                count = int(sum(parts.values()))
-                self._any_count_agg = True
-            else:
-                mask = self._gather_mask(parts)
+            agg = get_aggregator(q.agg)
+            self._host_postprocess |= agg.host_postprocess
             results[ticket] = QueryResult(
                 ticket,
                 q,
-                count,
-                mask,
+                agg.merge(parts, self.store),
                 t1 - t_submit,
                 cache_hit=self._cache_hits.pop(ticket),
             )
@@ -480,21 +593,15 @@ class ShardedFlashQL:
         self._maskmat_cache[shard_seq] = mat
         return mat
 
-    def _gather_mask(self, parts: dict[int, np.ndarray]) -> BitVector:
-        """Un-stripe per-shard result bitmaps back into global row order."""
-        bits = np.zeros((self.store.num_rows,), dtype=np.uint8)
-        for s, words in parts.items():
-            n_s = self.store.shards[s].num_rows
-            shard_bits = np.asarray(unpack_bits(words, n_s))
-            bits[self.store.row_maps[s]] = shard_bits
-        return BitVector(pack_bits(jnp.asarray(bits)), self.store.num_rows)
-
     def serve(self, queries: list[Query]) -> list[QueryResult]:
         """Submit + flush until drained; results in submission order."""
         tickets = [self.submit(q) for q in queries]
         results: dict[int, QueryResult] = {}
         while self.pending:
             results.update(self.flush())
+        # tickets whose every shard was pruned at submit never enter a
+        # queue; one more flush gathers them
+        results.update(self.flush())
         return [results[t] for t in tickets]
 
     # -- reporting -----------------------------------------------------------
@@ -506,6 +613,7 @@ class ShardedFlashQL:
             "queries_served": self.queries_served,
             "flushes": self.flushes,
             "fused_flushes": self.fused_flushes,
+            "shards_pruned": self.shards_pruned,
             "vmap_batches": self.signature_groups,
             "distinct_signatures": self.distinct_signatures,
             "eager_plans": self.eager_plans,
@@ -537,7 +645,7 @@ class ShardedFlashQL:
                 wordlines_sensed=self.shard_wordlines[s],
                 num_rows=self.store.shards[s].num_rows,
                 num_queries=self.queries_served,
-                host_postprocess=self._any_count_agg,
+                host_postprocess=self._host_postprocess,
                 ssd=ssd,
                 name=f"flashql-shard{s}({self.queries_served}q)",
             )
@@ -571,6 +679,7 @@ def build_sharded_flashql(
     num_shards: int,
     *,
     policy: str = "roundrobin",
+    stripe_key: str | None = None,
     num_planes: int = 4,
     warmup: Iterable[Query] = (),
     queue_depth: int = 256,
@@ -578,7 +687,9 @@ def build_sharded_flashql(
 ) -> ShardedFlashQL:
     """Ingest ``table``, program ``num_shards`` fresh devices, return the
     serving frontend — the one-call path used by tests and benchmarks."""
-    store = ShardedBitmapStore(num_shards=num_shards, policy=policy)
+    store = ShardedBitmapStore(
+        num_shards=num_shards, policy=policy, stripe_key=stripe_key
+    )
     store.ingest(table)
     devices = [
         FlashDevice(num_planes=num_planes, interpret=interpret)

@@ -1,0 +1,366 @@
+"""Aggregate pipeline tests: weighted-popcount identities, batching, and
+admission-time validation.
+
+Covers the :mod:`repro.query.aggregate` pluggable pipeline:
+
+* property tests (via ``tests/_hypothesis_compat``) for the bit-slice
+  arithmetic identities — SUM as Σ 2^b · popcount(mask ∧ slice_b) and the
+  MIN/MAX slice walk — against plain numpy;
+* the batching invariant: a flush mixing every aggregate kind dispatches
+  exactly as many jit-of-vmap signature groups as the same flush with
+  COUNT only (aggregation must not multiply vmap groups);
+* submit-time validation on both schedulers (bad aggregate columns can
+  never throw mid-flush and desync shard queues);
+* empty selections, TOP-K tie-breaking, shard-routing pruning, and the
+  absence of per-Agg ladders in the scheduler sources.
+"""
+
+import inspect
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.bitops import pack_bits
+from repro.query import (
+    Avg,
+    BatchScheduler,
+    BitmapStore,
+    Count,
+    Eq,
+    FlashDevice,
+    GroupBy,
+    In,
+    Mask,
+    Max,
+    Min,
+    Query,
+    Range,
+    Sum,
+    TopK,
+    build_sharded_flashql,
+)
+from repro.query.aggregate import bsi_extreme, sliced_counts
+from repro.query.ast import Not, and_ as qand
+
+from tests._hypothesis_compat import given, settings, st
+
+ALL_AGGS = (
+    Count(),
+    Mask(),
+    Sum("sales"),
+    Avg("sales"),
+    Min("sales"),
+    Max("sales"),
+    TopK("device", 3),
+    GroupBy("device"),
+    GroupBy("device", Sum("sales")),
+    GroupBy("device", Avg("sales")),
+)
+
+
+def _table(rng, n):
+    return {
+        "country": rng.integers(0, 6, n),
+        "device": rng.integers(0, 4, n),
+        "sales": rng.integers(0, 500, n),
+    }
+
+
+def _scheduler(table, planes=2):
+    store = BitmapStore()
+    store.ingest(table)
+    dev = FlashDevice(num_planes=planes)
+    store.program(dev)
+    return BatchScheduler(dev, store)
+
+
+# -- weighted-popcount identities --------------------------------------------
+
+
+def _pack_rows(bits_rows) -> jnp.ndarray:
+    return jnp.stack(
+        [pack_bits(jnp.asarray(r.astype(np.uint8))) for r in bits_rows]
+    )
+
+
+def _check_sum_identity(seed: int, n: int, bits: int) -> None:
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1 << bits, n)
+    sel = rng.integers(0, 2, n).astype(bool)
+    mask = _pack_rows([sel])  # (1, W)
+    slices = _pack_rows([(vals >> b) & 1 for b in range(bits)])[None]
+    counts = np.asarray(sliced_counts(mask, slices, interpret=True))[0]
+    got = sum(int(c) << b for b, c in enumerate(counts))
+    assert got == int(vals[sel].sum())
+
+
+def _check_extreme_identity(seed: int, n: int, bits: int) -> None:
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1 << bits, n)
+    sel = rng.integers(0, 2, n).astype(bool)
+    mask = _pack_rows([sel])
+    slices = _pack_rows([(vals >> b) & 1 for b in range(bits)])[None]
+    for maximize in (False, True):
+        dec, nonempty = bsi_extreme(mask, slices, maximize=maximize)
+        dec, nonempty = np.asarray(dec)[0], bool(np.asarray(nonempty)[0])
+        assert nonempty == bool(sel.any())
+        if nonempty:
+            got = sum(int(d) << b for b, d in enumerate(dec))
+            want = int(vals[sel].max() if maximize else vals[sel].min())
+            assert got == want, (seed, maximize, got, want)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_sum_weighted_popcount_identity_corpus(seed):
+    _check_sum_identity(seed, n=97 + seed, bits=7)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_minmax_slice_walk_identity_corpus(seed):
+    _check_extreme_identity(seed, n=97 + seed, bits=7)
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    n=st.integers(min_value=1, max_value=200),
+    bits=st.integers(min_value=1, max_value=10),
+)
+def test_sum_weighted_popcount_identity_property(seed, n, bits):
+    _check_sum_identity(seed, n, bits)
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    n=st.integers(min_value=1, max_value=200),
+    bits=st.integers(min_value=1, max_value=10),
+)
+def test_minmax_slice_walk_identity_property(seed, n, bits):
+    _check_extreme_identity(seed, n, bits)
+
+
+# -- batching: aggregation must not multiply vmap groups ---------------------
+
+
+def test_mixed_aggregate_flush_keeps_count_only_vmap_groups():
+    """One flush holding EVERY aggregate kind over the same predicate
+    shapes must dispatch exactly the signature groups of the COUNT-only
+    flush: aggregation rides on the predicate execution, it never forks
+    the vmap batch."""
+    rng = np.random.default_rng(7)
+    table = _table(rng, 513)
+    preds = [qand(Eq("country", c), Eq("device", c % 4)) for c in range(4)]
+
+    base = _scheduler(table)
+    base.serve([Query(p) for p in preds])
+    count_only_groups = base.device.last_signature_groups
+    assert count_only_groups >= 1
+
+    mixed = _scheduler(table)
+    queries = [Query(p, agg=a) for p in preds for a in ALL_AGGS]
+    results = mixed.serve(queries)
+    assert mixed.device.last_signature_groups == count_only_groups
+    # plan cache must not fork per aggregate either
+    assert mixed.compiler.misses == base.compiler.misses
+
+    # spot-check values against numpy while we're here
+    for q, r in zip(queries, results):
+        sel = np.ones(513, bool)
+        for leaf in q.where.children:
+            sel &= table[leaf.column] == leaf.value
+        if isinstance(q.agg, Count):
+            assert r.value == int(sel.sum())
+        elif isinstance(q.agg, Sum):
+            assert r.value == int(table["sales"][sel].sum())
+
+
+def test_sharded_mixed_aggregates_keep_vmap_groups():
+    rng = np.random.default_rng(8)
+    table = _table(rng, 257)
+    preds = [Query(Eq("country", c)) for c in range(3)]
+    base = build_sharded_flashql(table, 3, num_planes=2)
+    base.serve(preds)
+    g0 = base.stats()["vmap_batches"]
+
+    mixed = build_sharded_flashql(table, 3, num_planes=2)
+    mixed.serve(
+        [Query(Eq("country", c), agg=a) for c in range(3) for a in ALL_AGGS]
+    )
+    assert mixed.stats()["vmap_batches"] == g0
+
+
+# -- admission-time validation ----------------------------------------------
+
+
+def test_bad_aggregate_rejected_at_submit_both_schedulers():
+    rng = np.random.default_rng(9)
+    table = _table(rng, 100)
+    sched = _scheduler(table)
+    sq = build_sharded_flashql(table, 2, num_planes=2)
+    for bad in (
+        Sum("nope"),
+        Avg("nope"),
+        Min("nope"),
+        TopK("nope", 2),
+        GroupBy("nope"),
+        GroupBy("device", Sum("nope")),
+    ):
+        with pytest.raises(KeyError, match="nope"):
+            sched.submit(Query(Eq("country", 1), agg=bad))
+        with pytest.raises(KeyError, match="nope"):
+            sq.submit(Query(Eq("country", 1), agg=bad))
+    with pytest.raises(ValueError, match="k >= 1"):
+        sched.submit(Query(Eq("country", 1), agg=TopK("device", 0)))
+    with pytest.raises(TypeError, match="Count/Sum/Avg"):
+        sq.submit(Query(Eq("country", 1), agg=GroupBy("device", Mask())))
+    # unknown predicate columns are caught at submit too (symmetric with
+    # the sharded scheduler since PR 2)
+    with pytest.raises(KeyError, match="ghost"):
+        sched.submit(Query(Eq("ghost", 1)))
+    # nothing was admitted, queues are in lockstep, serving still works
+    assert sched.pending == 0 and sq.pending == 0
+    (r,) = sq.serve([Query(Eq("country", 1), agg=Sum("sales"))])
+    sel = table["country"] == 1
+    assert r.value == int(table["sales"][sel].sum())
+
+
+# -- semantics edge cases ----------------------------------------------------
+
+
+def test_empty_selection_aggregates():
+    """MIN/MAX/AVG of an empty selection are None; TOP-K/GROUP BY empty."""
+    rng = np.random.default_rng(10)
+    table = _table(rng, 64)
+    # contradiction: executes (not prunable — Not is never pruned) but
+    # selects nothing
+    empty = qand(Eq("country", 1), Not(Eq("country", 1)))
+    sched = _scheduler(table)
+    sq = build_sharded_flashql(table, 2, num_planes=2)
+    for serve in (sched.serve, sq.serve):
+        rs = serve(
+            [
+                Query(empty, agg=a)
+                for a in (
+                    Count(),
+                    Sum("sales"),
+                    Avg("sales"),
+                    Min("sales"),
+                    Max("sales"),
+                    TopK("device", 2),
+                    GroupBy("device"),
+                )
+            ]
+        )
+        assert [r.value for r in rs] == [0, 0, None, None, None, (), {}]
+
+
+def test_topk_tie_break_deterministic_across_shards():
+    """Equal counts rank by smaller value — identically for unsharded,
+    sharded, and merged-after-routing results."""
+    table = {
+        "device": np.array([0, 1, 2, 3] * 8),  # all counts equal (8)
+        "sales": np.arange(32),
+    }
+    want = ((0, 8), (1, 8), (2, 8))
+    (r,) = _scheduler(table).serve(
+        [Query(In("device", [0, 1, 2, 3]), agg=TopK("device", 3))]
+    )
+    assert r.value == want
+    for shards in (2, 3):
+        (r,) = build_sharded_flashql(table, shards, num_planes=2).serve(
+            [Query(In("device", [0, 1, 2, 3]), agg=TopK("device", 3))]
+        )
+        assert r.value == want
+
+
+# -- shard routing -----------------------------------------------------------
+
+
+def test_range_stripe_routing_prunes_shards():
+    rng = np.random.default_rng(11)
+    n = 400
+    table = {"uid": rng.integers(0, 1000, n), "sales": rng.integers(0, 50, n)}
+    sq = build_sharded_flashql(
+        table, 4, policy="range", stripe_key="uid", num_planes=2
+    )
+    lo, hi = 0, 99  # first decile: lives on one stripe of the sorted key
+    (r,) = sq.serve([Query(Range("uid", lo, hi), agg=Sum("sales"))])
+    sel = (table["uid"] >= lo) & (table["uid"] <= hi)
+    assert r.value == int(table["sales"][sel].sum())
+    assert sq.stats()["shards_pruned"] >= 2  # most stripes cannot match
+
+    # a fully-pruned query (key outside every stripe) completes without
+    # touching any device queue
+    before = sq.stats()["mws_commands"]
+    rs = sq.serve(
+        [
+            Query(Eq("uid", 10**6), agg=Count()),
+            Query(Eq("uid", 10**6), agg=Mask()),
+            Query(Eq("uid", 10**6), agg=Min("sales")),
+        ]
+    )
+    assert rs[0].value == 0
+    assert int(np.asarray(rs[1].value.to_bits()).sum()) == 0
+    assert rs[2].value is None
+    assert sq.stats()["mws_commands"] == before  # nothing was sensed
+
+
+def test_stripe_key_mask_unstripes_sorted_rows():
+    """stripe_key striping permutes rows across shards by key order; MASK
+    results must come back in global (ingest) row order."""
+    rng = np.random.default_rng(12)
+    n = 130
+    table = {"uid": rng.permutation(n), "sales": rng.integers(0, 9, n)}
+    sq = build_sharded_flashql(
+        table, 3, policy="range", stripe_key="uid", num_planes=2
+    )
+    (r,) = sq.serve([Query(Range("uid", 10, 40), agg=Mask())])
+    want = (table["uid"] >= 10) & (table["uid"] <= 40)
+    np.testing.assert_array_equal(
+        np.asarray(r.value.to_bits()).astype(bool), want
+    )
+
+
+# -- aggregate traffic reaches the SSD projection ----------------------------
+
+
+def test_aggregate_slice_reads_counted_in_projection():
+    from repro.query.scheduler import AGG_READ_SHAPE
+
+    rng = np.random.default_rng(13)
+    table = _table(rng, 100)
+    # the predicate plan itself senses single-wordline commands that land
+    # in the same shape bucket, so compare against a COUNT-only baseline
+    base = _scheduler(table)
+    base.serve([Query(Eq("country", 1))])
+    sched = _scheduler(table)
+    sched.serve([Query(Eq("country", 1), agg=Sum("sales"))])
+    bits = sched.store.columns["sales"].bits
+    extra = (
+        sched.command_shape_counts[AGG_READ_SHAPE]
+        - base.command_shape_counts[AGG_READ_SHAPE]
+    )
+    assert extra == bits
+    assert (
+        sched.wordlines_sensed - base.wordlines_sensed == bits
+    )
+    proj = sched.projection()  # host postprocess flagged, model runs
+    assert proj["fc_time_s"] > 0
+
+
+# -- the ladders are gone ----------------------------------------------------
+
+
+def test_no_per_agg_ladders_in_schedulers():
+    """The acceptance criterion of the aggregate-pipeline refactor: no
+    per-Agg special cases survive in either scheduler — everything flows
+    through the Aggregator interface."""
+    import repro.query.scheduler as scheduler_mod
+    import repro.query.shard as shard_mod
+
+    for mod in (scheduler_mod, shard_mod):
+        src = inspect.getsource(mod)
+        assert "Agg.COUNT" not in src and "Agg.MASK" not in src, mod

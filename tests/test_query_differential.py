@@ -1,14 +1,19 @@
 """Differential test harness: sharded vs unsharded FlashQL vs oracles.
 
 A seeded generator draws random ``Eq``/``In``/``Range``/``And``/``Or``/
-``Not`` trees over mixed equality + BSI columns; every query executes on
+``Not`` trees over mixed equality + BSI columns — each paired with COUNT,
+MASK, and a randomly drawn aggregate (SUM/AVG/MIN/MAX/TOP-K/GROUP BY) —
+and every query executes on
 
 * unsharded FlashQL (``BatchScheduler`` over one ``FlashDevice``),
 * sharded FlashQL (``ShardedFlashQL``) for shard counts {1, 2, 3} under
-  both stripe policies, including row counts that do not divide evenly,
+  both stripe policies (plus a ``stripe_key``-sorted range fleet, which
+  exercises shard routing), including row counts that do not divide
+  evenly,
 
-and the results are checked **bit-exact** against the ``eval_expr`` oracle
-on the logical bitmap pages and a plain-numpy oracle on the raw table.
+and the results are checked **bit-exact** (exact-integer for SUM and the
+AVG numerator) against the ``eval_expr`` oracle on the logical bitmap
+pages and a plain-numpy oracle on the raw table.
 
 Property-style execution goes through ``tests/_hypothesis_compat``: with
 `hypothesis` installed, seeds/shapes are drawn adversarially; without it,
@@ -21,18 +26,26 @@ import pytest
 from repro.core.engine import eval_expr
 from repro.query import (
     Agg,
+    Avg,
     BatchScheduler,
     BitmapStore,
+    Count,
     Eq,
     FlashDevice,
+    GroupBy,
     In,
+    Mask,
+    Max,
+    Min,
     Not,
     Query,
     Range,
+    Sum,
+    TopK,
     build_sharded_flashql,
     lower,
 )
-from repro.query.ast import And, Or, and_ as qand, or_ as qor
+from repro.query.ast import And, Or, and_ as qand, normalize_agg, or_ as qor
 
 from tests._hypothesis_compat import given, settings, st
 
@@ -80,6 +93,59 @@ def _random_pred(rng, depth=0):
     return qand(*children) if kind == 4 else qor(*children)
 
 
+def _random_agg(rng):
+    """Draw one of the non-trivial aggregates over a random column."""
+    col = ("country", "device", "age")[int(rng.integers(0, 3))]
+    kind = int(rng.integers(0, 6))
+    if kind == 0:
+        return Sum(col)
+    if kind == 1:
+        return Avg(col)
+    if kind == 2:
+        return Min(col)
+    if kind == 3:
+        return Max(col)
+    if kind == 4:
+        return TopK(col, int(rng.integers(1, 5)))
+    key = ("country", "device")[int(rng.integers(0, 2))]
+    inner = (Count(), Sum("age"), Avg("age"))[int(rng.integers(0, 3))]
+    return GroupBy(key, inner)
+
+
+def _np_agg_oracle(spec, sel, table):
+    """Plain-numpy aggregate over the selected-row mask ``sel``."""
+    if isinstance(spec, Sum):
+        return int(table[spec.column][sel].sum())
+    if isinstance(spec, Avg):
+        c = int(sel.sum())
+        return int(table[spec.column][sel].sum()) / c if c else None
+    if isinstance(spec, Min):
+        v = table[spec.column][sel]
+        return int(v.min()) if len(v) else None
+    if isinstance(spec, Max):
+        v = table[spec.column][sel]
+        return int(v.max()) if len(v) else None
+    if isinstance(spec, TopK):
+        vals, counts = np.unique(table[spec.column][sel], return_counts=True)
+        ranked = sorted(
+            zip(vals.tolist(), counts.tolist()),
+            key=lambda vc: (-vc[1], vc[0]),
+        )
+        return tuple((int(v), int(c)) for v, c in ranked)[: spec.k]
+    assert isinstance(spec, GroupBy)
+    out = {}
+    for v in np.unique(table[spec.key]):
+        m = sel & (table[spec.key] == v)
+        c = int(m.sum())
+        if not c:
+            continue
+        if isinstance(spec.value, Count):
+            out[int(v)] = c
+        else:
+            out[int(v)] = _np_agg_oracle(spec.value, m, table)
+    return out
+
+
 def _np_oracle(pred, table, n):
     if isinstance(pred, Eq):
         return table[pred.column] == pred.value
@@ -110,9 +176,11 @@ def _run_differential(seed: int, n: int, policy: str) -> None:
     rng = np.random.default_rng(seed)
     table = _table(rng, n)
     preds = [_random_pred(rng) for _ in range(5)]
-    queries = [Query(p) for p in preds] + [
-        Query(p, agg=Agg.MASK) for p in preds
-    ]
+    queries = (
+        [Query(p) for p in preds]
+        + [Query(p, agg=Agg.MASK) for p in preds]
+        + [Query(p, agg=_random_agg(rng)) for p in preds]
+    )
 
     # unsharded reference
     store = BitmapStore()
@@ -127,6 +195,11 @@ def _run_differential(seed: int, n: int, policy: str) -> None:
         ).serve(queries)
         for s in SHARD_COUNTS
     }
+    if policy == "range":
+        # stripe_key-sorted fleet: same results, but shard routing prunes
+        sharded["routed"] = build_sharded_flashql(
+            table, 3, policy="range", stripe_key="age", num_planes=2
+        ).serve(queries)
 
     for i, q in enumerate(queries):
         want_bits = _np_oracle(q.where, table, n)
@@ -138,18 +211,29 @@ def _run_differential(seed: int, n: int, policy: str) -> None:
             )[:n]
         ).astype(bool)
         np.testing.assert_array_equal(oracle_bits, want_bits)
-        if q.agg is Agg.COUNT:
+        spec = normalize_agg(q.agg)
+        if isinstance(spec, Count):
             want = int(want_bits.sum())
             assert ref[i].count == want
-            for s in SHARD_COUNTS:
-                assert sharded[s][i].count == want, (seed, n, policy, s, q)
-        else:
+            for s, res in sharded.items():
+                assert res[i].count == want, (seed, n, policy, s, q)
+        elif isinstance(spec, Mask):
             ref_bits = np.asarray(ref[i].mask.to_bits()).astype(bool)
             np.testing.assert_array_equal(ref_bits, want_bits)
-            for s in SHARD_COUNTS:
-                got = np.asarray(sharded[s][i].mask.to_bits()).astype(bool)
+            for s, res in sharded.items():
+                got = np.asarray(res[i].mask.to_bits()).astype(bool)
                 np.testing.assert_array_equal(
                     got, want_bits, err_msg=f"{(seed, n, policy, s, q)}"
+                )
+        else:
+            # SUM/AVG are exact-integer (numerator), so == is the right
+            # comparison even for the float AVG: both sides divide the
+            # same two Python ints
+            want = _np_agg_oracle(spec, want_bits, table)
+            assert ref[i].value == want, (seed, n, policy, q, ref[i].value)
+            for s, res in sharded.items():
+                assert res[i].value == want, (
+                    seed, n, policy, s, q, res[i].value,
                 )
 
 
