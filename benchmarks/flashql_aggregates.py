@@ -23,11 +23,11 @@ Run:  PYTHONPATH=src python benchmarks/flashql_aggregates.py [--smoke]
 from __future__ import annotations
 
 import sys
-import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from _harness import REPS, interleaved_best_of
 from repro.kernels.popcount import popcount
 from repro.query import (
     BatchScheduler,
@@ -41,8 +41,6 @@ from repro.query import (
 from repro.query.ast import and_ as qand
 from repro.query.bitmap import bsi_pages
 from repro.query.compile import QueryCompiler
-
-REPS = 5  # best-of-N: one-shot wall timings are too noisy for a gate
 
 
 def build_queries(rng, num_queries) -> list[Query]:
@@ -134,16 +132,18 @@ def main() -> None:
     got = sequential_sums(dev, seq_compiler, queries, valid, slices)
     assert got == want, "sequential SUM diverges from numpy oracle"
 
-    # interleaved best-of-REPS: both configurations timed inside the same
-    # short window each rep so machine-load swings hit both sides alike
-    t_batch = t_seq = float("inf")
-    for _ in range(REPS):
-        t0 = time.perf_counter()
-        sched.serve(queries)
-        t_batch = min(t_batch, time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        sequential_sums(dev, seq_compiler, queries, valid, slices)
-        t_seq = min(t_seq, time.perf_counter() - t0)
+    # interleaved best-of-REPS (benchmarks/_harness.py): both
+    # configurations timed inside the same short window each rep so
+    # machine-load swings hit both sides alike
+    best = interleaved_best_of(
+        {
+            "batched": lambda: sched.serve(queries),
+            "sequential": lambda: sequential_sums(
+                dev, seq_compiler, queries, valid, slices
+            ),
+        }
+    )
+    t_batch, t_seq = best["batched"], best["sequential"]
 
     qps_batch = num_queries / t_batch
     qps_seq = num_queries / t_seq

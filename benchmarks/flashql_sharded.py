@@ -30,10 +30,10 @@ is noise — while still exercising every scatter/gather path.
 from __future__ import annotations
 
 import sys
-import time
 
 import numpy as np
 
+from _harness import REPS, interleaved_best_of
 from repro.query import (
     Agg,
     BatchScheduler,
@@ -76,9 +76,6 @@ def np_count(q: Query, table) -> int:
     return int(m(q.where).sum())
 
 
-REPS = 5  # best-of-N: one-shot wall timings are too noisy for a gate
-
-
 def single_device_scheduler(table, queries) -> BatchScheduler:
     """The unsharded flashql_throughput configuration, warmed."""
     store = BitmapStore()
@@ -108,10 +105,8 @@ def per_chip_schedulers(sq, queries) -> list[BatchScheduler]:
     return scheds
 
 
-def timed_serve(sched: BatchScheduler, queries) -> tuple[float, list[int]]:
-    t0 = time.perf_counter()
-    results = sched.serve(queries)
-    return time.perf_counter() - t0, [r.count for r in results]
+def serve_counts(sched: BatchScheduler, queries) -> list[int]:
+    return [r.count for r in sched.serve(queries)]
 
 
 def main() -> None:
@@ -152,28 +147,29 @@ def main() -> None:
         )
         chips = per_chip_schedulers(sq, queries)
         merged = [
-            sum(c)
-            for c in zip(*(timed_serve(ch, queries)[1] for ch in chips))
+            sum(c) for c in zip(*(serve_counts(ch, queries) for ch in chips))
         ]
         assert merged == want, "per-device merge diverges from oracle"
         fleets[n_shards] = (sq, chips, groups, shapes)
 
-    # interleaved best-of-REPS: every configuration is timed inside the
-    # same short window each rep, so machine-load swings hit all sides
-    # alike instead of gating on whichever ran during a quiet spell
-    t_1 = float("inf")
-    t_chip = {n: [float("inf")] * len(f[1]) for n, f in fleets.items()}
-    t_fused = dict.fromkeys(fleets, float("inf"))
-    for _ in range(REPS):
-        t_1 = min(t_1, timed_serve(sched_1, queries)[0])
-        for n, (sq, chips, _, _) in fleets.items():
-            for i, ch in enumerate(chips):
-                t_chip[n][i] = min(
-                    t_chip[n][i], timed_serve(ch, queries)[0]
-                )
-            t0 = time.perf_counter()
-            sq.serve(queries)
-            t_fused[n] = min(t_fused[n], time.perf_counter() - t0)
+    # interleaved best-of-REPS (benchmarks/_harness.py): every
+    # configuration is timed inside the same short window each rep, so
+    # machine-load swings hit all sides alike instead of gating on
+    # whichever ran during a quiet spell
+    timers = {"1dev": lambda: sched_1.serve(queries)}
+    for n, (sq, chips, _, _) in fleets.items():
+        for i, ch in enumerate(chips):
+            timers[("chip", n, i)] = (
+                lambda c=ch: c.serve(queries)
+            )
+        timers[("fused", n)] = (lambda s=sq: s.serve(queries))
+    best = interleaved_best_of(timers)
+    t_1 = best["1dev"]
+    t_chip = {
+        n: [best[("chip", n, i)] for i in range(len(f[1]))]
+        for n, f in fleets.items()
+    }
+    t_fused = {n: best[("fused", n)] for n in fleets}
 
     qps_1 = num_queries / t_1
     print(f"1 device  (BatchScheduler)    : {t_1:7.3f}s  {qps_1:8.1f} q/s")

@@ -13,15 +13,16 @@ shapes.  We compare:
 Also prints the full-scale SSD projection of the served traffic (Table-1
 geometry) and asserts the acceptance criteria: >= 64 queries per batch,
 batched path measurably faster, and every result equal to the numpy oracle.
+Timing is best-of-REPS interleaved via ``benchmarks/_harness.py``.
 
 Run:  PYTHONPATH=src python benchmarks/flashql_throughput.py
 """
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
+
+from _harness import interleaved_best_of
 
 from repro.core.engine import FlashArray
 from repro.core.planner import Planner
@@ -96,24 +97,27 @@ def main() -> None:
     # -- sequential baseline: per-query plan + execute + popcount ----------
     arr = FlashArray()
     store.program(arr)
-    run_sequential(arr)  # warm
-    t0 = time.perf_counter()
-    seq_counts = run_sequential(arr)
-    t_seq = time.perf_counter() - t0
+    seq_counts = run_sequential(arr)  # warm + capture for correctness
 
     # -- FlashQL batched path ---------------------------------------------
     dev = FlashDevice(num_planes=4)
     store.program(dev, warmup=queries[:3])
     sched = BatchScheduler(dev, store, max_batch=NUM_QUERIES)
-    sched.serve(queries)  # warm
-    t0 = time.perf_counter()
-    results = sched.serve(queries)
-    t_batch = time.perf_counter() - t0
+    results = sched.serve(queries)  # warm + capture for correctness
 
     # -- correctness (acceptance: bit-exact vs oracle) ----------------------
     for q, r, sc in zip(queries, results, seq_counts):
         want = np_count(q, table)
         assert r.count == want == sc, (q, r.count, sc, want)
+
+    # -- steady-state timing: best-of-REPS, interleaved ---------------------
+    best = interleaved_best_of(
+        {
+            "sequential": lambda: run_sequential(arr),
+            "batched": lambda: sched.serve(queries),
+        }
+    )
+    t_seq, t_batch = best["sequential"], best["batched"]
 
     qps_seq = NUM_QUERIES / t_seq
     qps_batch = NUM_QUERIES / t_batch

@@ -32,6 +32,7 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bitops import BitOp
 from repro.core.commands import (
@@ -110,6 +111,10 @@ class FlashArray:
     # names of non-ESP pages, maintained incrementally so hot paths never
     # scan program_configs (one entry per (column, value) bitmap adds up)
     _non_esp: set = field(default_factory=set, repr=False)
+    # host-initiated ESP page programs (fc_write(esp=True) + fc_append):
+    # incremental ingest is gated on this — appending B rows must program
+    # O(B) pages, not O(num_rows) (delta-page programming)
+    esp_programs: int = 0
 
     # -- host API (fc_write / fc_read, §6.3) -------------------------------
     def fc_write(
@@ -145,6 +150,25 @@ class FlashArray:
         physical = ~words if inverted else words
         self.store[name] = physical
         self.pec[p.block] = self.pec.get(p.block, 0) + 1
+        if esp:
+            self.esp_programs += 1
+
+    def fc_append(self, name: str, words, *, start: int) -> None:
+        """Delta-page ESP program: extend an already-placed page's tail.
+
+        Only ``words`` (logical, at word offset ``start``) are programmed —
+        ONE page program's worth of traffic however many earlier words the
+        page holds, which is what makes appending B rows to an N-row index
+        cost O(B) instead of O(N).  The page keeps its placement, inversion,
+        and program config; the store treats the write as a tail extension
+        (compiled plans stay valid, see ``PackedStore.append_words``).
+        """
+        p = self.layout[name]
+        w = np.asarray(words, dtype=np.uint32)
+        physical = ~w if p.inverted else w
+        self.store.append_words(name, physical, start)
+        self.pec[p.block] = self.pec.get(p.block, 0) + 1
+        self.esp_programs += 1
 
     def fc_read(self, e: Expr) -> jax.Array:
         """Plan + execute a bulk bitwise expression; returns logical words."""

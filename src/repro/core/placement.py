@@ -40,6 +40,13 @@ class Layout:
     # engine resolves every sensed wordline through it, so lookup must not
     # scan all placements.
     _by_location: dict[tuple[int, int], str] = field(default_factory=dict)
+    # appendable page regions: region name -> the block the region is
+    # currently filling.  place_colocated(..., region=...) records it, so a
+    # later call with the same region continues packing the same block —
+    # incremental ingest drops a column's new equality/BSI pages into the
+    # column's reserved region instead of scattering one page per block.
+    # Forks copy region state, keeping shard layouts appending in lockstep.
+    _regions: dict[str, int] = field(default_factory=dict)
 
     # -- explicit placement ------------------------------------------------
     def place(
@@ -83,6 +90,7 @@ class Layout:
             self._next_block,
             self._scratch_count,
             dict(self._by_location),
+            dict(self._regions),
         )
 
     def fork(self) -> "Layout":
@@ -104,7 +112,15 @@ class Layout:
             self._next_block,
             self._scratch_count,
             self._by_location,
-        ) = (dict(snap[0]), dict(snap[1]), snap[2], snap[3], dict(snap[4]))
+            self._regions,
+        ) = (
+            dict(snap[0]),
+            dict(snap[1]),
+            snap[2],
+            snap[3],
+            dict(snap[4]),
+            dict(snap[5]),
+        )
 
     # -- allocation helpers --------------------------------------------
     def alloc_block(self) -> int:
@@ -114,17 +130,30 @@ class Layout:
         return b
 
     def place_colocated(
-        self, names: list[str], inverted: bool = False
+        self,
+        names: list[str],
+        inverted: bool = False,
+        region: str | None = None,
     ) -> list[PagePlacement]:
-        """Pack names into as few blocks as possible (AND / De-Morgan-OR)."""
+        """Pack names into as few blocks as possible (AND / De-Morgan-OR).
+
+        With ``region``, the packing state persists: a later call naming
+        the same region continues filling the region's current block, so
+        incrementally-ingested pages stay co-located with the column they
+        extend (a fresh block is allocated only when the region fills up).
+        """
         out = []
-        block = self.alloc_block()
+        block = self._regions.get(region) if region is not None else None
+        if block is None:
+            block = self.alloc_block()
         for name in names:
             wl = self._block_fill[block]
             if wl >= self.wls_per_block:
                 block = self.alloc_block()
                 wl = 0
             out.append(self.place(name, block, wl, inverted))
+        if region is not None:
+            self._regions[region] = block
         return out
 
     def place_spread(self, names: list[str]) -> list[PagePlacement]:

@@ -36,6 +36,21 @@ _ONES = np.uint32(0xFFFFFFFF)
 _SCRATCH_PREFIX = "__scratch"
 
 
+def page_region(name: str) -> str | None:
+    """Epoch region of a page name, or ``None`` for planner scratch pages.
+
+    The naming convention shared with :mod:`repro.query.bitmap`: equality
+    bitmaps are ``column=value`` and BSI slices ``column#bit``, so the
+    prefix before the first ``=`` / ``#`` groups every page of one column
+    into one region; constant pages (``__all`` / ``__none``) are their own
+    single-page regions.  Plan caches invalidate per region, so
+    reprogramming one column's pages leaves plans over other columns warm.
+    """
+    if name.startswith(_SCRATCH_PREFIX):
+        return None
+    return name.split("=", 1)[0].split("#", 1)[0]
+
+
 @dataclass
 class PackedStore:
     """Name-addressed packed page store striped over ``planes`` planes.
@@ -52,12 +67,19 @@ class PackedStore:
     _n: int = 0
     _words: int | None = None  # logical words per page (pre-padding)
     _snapshot: jax.Array | None = None
-    # Mutation epoch: bumped whenever page *content* changes (new page or
-    # reprogram), except planner scratch pages — those are plan-internal
-    # temporaries rewritten on every execution of a spilling plan and never
-    # invalidate any compiled plan.  Plan caches key on this so mutating one
-    # device's store recompiles only that device's plans.
+    # Content version: bumped whenever page *content* changes (new page,
+    # reprogram, or delta append), except planner scratch pages — those are
+    # plan-internal temporaries rewritten on every execution of a spilling
+    # plan.  Snapshot-level caches (stacked fleet arrays, aggregate extras)
+    # key on this.
     epoch: int = 0
+    # Region-granular mutation epochs (see :func:`page_region`): bumped on
+    # a full (re)program of a page in the region, but NOT by
+    # :meth:`append_words` — an append extends a page's erased tail, so
+    # compiled plans (which gather by slot) remain valid.  Plan caches key
+    # on the regions their leaves touch, so reprogramming column A's pages
+    # recompiles only plans that sense column A.
+    region_epochs: dict[str, int] = field(default_factory=dict)
 
     # -- geometry ----------------------------------------------------------
     @property
@@ -119,7 +141,31 @@ class PackedStore:
             self._slots[name] = slot
         self._buf[slot] = row
         self._snapshot = None
-        if not name.startswith(_SCRATCH_PREFIX):
+        region = page_region(name)
+        if region is not None:
+            self.epoch += 1
+            self.region_epochs[region] = self.region_epochs.get(region, 0) + 1
+
+    def append_words(self, name: str, words, start: int) -> None:
+        """Delta-page programming: overwrite only ``words`` at ``start``.
+
+        The incremental-ingest write path.  The caller guarantees the
+        written range covers only the page's tail beyond previously-valid
+        rows (an *append*), so compiled plans — which gather by slot —
+        remain valid: the page's region epoch is left alone and only the
+        content ``epoch`` is bumped (snapshot-level caches must refresh).
+        """
+        w = np.asarray(words, dtype=np.uint32).reshape(-1)
+        slot = self._slots[name]
+        assert self._words is not None
+        if start < 0 or start + w.shape[0] > self._words:
+            raise ValueError(
+                f"delta [{start}, {start + w.shape[0]}) out of range for "
+                f"page {name!r} with {self._words} words"
+            )
+        self._buf[slot, start : start + w.shape[0]] = w
+        self._snapshot = None
+        if page_region(name) is not None:
             self.epoch += 1
 
     # -- reads -------------------------------------------------------------

@@ -34,6 +34,7 @@ class SSDConfig:
 
     # -- power/energy constants (documented estimates; §Energy in DESIGN) --
     p_read_w: float = 0.0825  # per-plane active sense power (≈25 mA @ 3.3 V)
+    p_prog_w: float = 0.165  # per-plane program power (~2x read: ISPP pulses)
     e_dma_per_bit: float = 8e-12  # ONFI channel I/O
     e_ext_per_bit: float = 15e-12  # PCIe + SSD controller
     e_accel_per_64b: float = 93e-12  # ISP accelerator (Table 1)

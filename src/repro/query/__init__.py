@@ -57,7 +57,7 @@ from repro.query.ast import (
     Sum,
     TopK,
 )
-from repro.query.bitmap import BitmapStore
+from repro.query.bitmap import AppendDelta, BitmapStore, PageDelta
 from repro.query.compile import CompiledQuery, QueryCompiler, lower
 from repro.query.device import FlashDevice
 from repro.query.scheduler import BatchScheduler, QueryResult
@@ -87,7 +87,9 @@ __all__ = [
     "TopK",
     "get_aggregator",
     "validate_query",
+    "AppendDelta",
     "BitmapStore",
+    "PageDelta",
     "CompiledQuery",
     "QueryCompiler",
     "lower",

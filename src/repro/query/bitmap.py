@@ -20,6 +20,15 @@ units De-Morgan-merges into one inter-block command — while BSI slices are
 stored plain + co-located.  Everything is ESP-programmed (`fc_write(...,
 esp=True)`), so query serving is error-free per the paper's reliability
 result.
+
+The index is *mutable*: :meth:`BitmapStore.append` extends a live index
+with new rows, reprogramming only the delta pages (tail words of pages
+the new rows set bits in, plus fresh pages for first-seen values and
+grown BSI widths — placed into the column's reserved layout region).
+Page word capacity is fixed at ingest (``reserve_rows``), so in-capacity
+appends only ever program erased tail words — the delta-page model that
+makes ESP, the paper's reliability-critical expensive step, an O(batch)
+cost per update instead of O(table).
 """
 
 from __future__ import annotations
@@ -31,11 +40,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitops import num_words, pack_bits, valid_mask
+from repro.core.bitops import WORD_BITS, num_words, valid_mask
 from repro.query.ast import Query
 
 TRUE_PAGE = "__all"
 FALSE_PAGE = "__none"
+
+
+def eq_region(column: str) -> str:
+    """Layout region holding a column's equality bitmaps (inverted)."""
+    return f"eq:{column}"
+
+
+def bsi_region(column: str) -> str:
+    """Layout region holding a column's BSI slices (plain)."""
+    return f"bsi:{column}"
 
 
 def eq_page(column: str, value: int) -> str:
@@ -81,14 +100,93 @@ class ColumnIndex:
         return self.values[-1] if self.values else 0
 
 
+def validate_batch(columns, rows: dict[str, np.ndarray]) -> int:
+    """Schema-level append-batch validation; returns the batch length.
+
+    Shared by :meth:`BitmapStore.check_append` (against the store's
+    columns) and :meth:`repro.query.shard.ShardedBitmapStore.append`
+    (against the fleet's global schema): the batch's column set must
+    EXACTLY match ``columns`` (missing and unknown both reject), all
+    columns must be equal length, and values must be non-negative.
+    """
+    missing = sorted(set(columns) - set(rows))
+    unknown = sorted(set(rows) - set(columns))
+    if missing or unknown:
+        raise ValueError(
+            "append batch columns do not match the ingest schema: "
+            f"missing {missing}, unknown {unknown}"
+        )
+    lengths = {len(v) for v in rows.values()}
+    if len(lengths) != 1:
+        raise ValueError(
+            f"ragged append batch: row counts {sorted(lengths)}"
+        )
+    (b,) = lengths
+    for col, vals in rows.items():
+        arr = np.asarray(vals)
+        if b and arr.min() < 0:
+            raise ValueError(f"column {col!r} has negative values")
+    return b
+
+
+@dataclass(frozen=True)
+class PageDelta:
+    """One page's contribution to an append (delta-page programming).
+
+    ``new`` pages (equality bitmap of a first-seen value, or a BSI slice
+    for a grown bit width) carry their full words and a placement region;
+    existing pages carry only the tail words from ``start`` on — the words
+    an append actually changes — so programming cost scales with the
+    appended rows, not the rows already resident.
+    """
+
+    name: str
+    start: int  # first programmed word (0 for new pages)
+    words: np.ndarray  # programmed words (the full page when new)
+    new: bool = False
+    region: str | None = None  # layout region for new pages
+    inverted: bool = False  # placement inversion for new pages
+
+
+@dataclass(frozen=True)
+class AppendDelta:
+    """Everything :meth:`BitmapStore.append` changed, ready to program."""
+
+    rows: int  # appended row count
+    start_row: int  # first appended global row index
+    pages: tuple[PageDelta, ...]
+
+    @property
+    def num_programs(self) -> int:
+        """ESP page programs this delta costs (one per touched page)."""
+        return len(self.pages)
+
+
 @dataclass
 class BitmapStore:
     """Ingests a columnar table; owns the logical bitmap pages."""
 
     num_rows: int = 0
     columns: dict[str, ColumnIndex] = field(default_factory=dict)
-    logical: dict[str, jax.Array] = field(default_factory=dict)  # packed
-    epoch: int = 0  # bumped per ingest; part of the plan-cache key
+    # packed logical pages, HOST-resident (numpy): appends mutate only the
+    # delta words in place, O(delta) per touched page; consumers convert
+    # to device arrays lazily (jnp.stack / fc_write / snapshot)
+    logical: dict[str, np.ndarray] = field(default_factory=dict)
+    # content version: bumped per ingest AND per append — snapshot-level
+    # caches (valid-row masks, stacked aggregate extras) key on it
+    epoch: int = 0
+    # per-column *metadata* epochs: bumped only when a column's lowering-
+    # relevant index metadata (distinct values / BSI bit width) changes.
+    # Plan caches key on the epochs of the columns a plan's leaves touch,
+    # so an append that only extends existing pages leaves every plan
+    # warm, and one that introduces a new value in column A invalidates
+    # only plans sensing column A.
+    column_epochs: dict[str, int] = field(default_factory=dict)
+    # row capacity reserved for appends: pages are sized for this many
+    # rows, so in-capacity appends only ever program erased tail words
+    # (the word count — and hence the programmed page geometry — is fixed
+    # at ingest; appends past capacity are rejected with a clear error)
+    capacity_rows: int = 0
     # Sharded stores pad every page to a fleet-wide word count so shard
     # snapshots stack under one vmap; padding bits are zero and masked out
     # of every aggregation (see valid_words_mask).
@@ -96,7 +194,10 @@ class BitmapStore:
 
     @property
     def words(self) -> int:
-        return max(num_words(self.num_rows), self.min_words)
+        return max(
+            num_words(max(self.num_rows, self.capacity_rows)),
+            self.min_words,
+        )
 
     def valid_words_mask(self) -> np.ndarray:
         """Per-word mask of real rows: zeros in the last word's slack bits
@@ -110,6 +211,7 @@ class BitmapStore:
         self,
         table: dict[str, np.ndarray],
         schema: dict[str, tuple[int, ...]] | None = None,
+        reserve_rows: int = 0,
     ) -> None:
         """Build equality + BSI bitmaps for every column of ``table``.
 
@@ -121,6 +223,10 @@ class BitmapStore:
         still get (all-zero) equality pages and the BSI width matches the
         global maximum, so predicate lowering, placement, and hence plan
         signatures are identical on every shard.
+
+        ``reserve_rows`` sizes every page for that many future
+        :meth:`append` rows beyond the ingested table — the page word
+        count is fixed here, so appends beyond the reserve are rejected.
         """
         lengths = {len(v) for v in table.values()}
         if len(lengths) != 1:
@@ -129,13 +235,14 @@ class BitmapStore:
         if self.num_rows and n != self.num_rows:
             raise ValueError("all ingests must share one row count")
         self.num_rows = n
+        self.capacity_rows = max(self.capacity_rows, n + reserve_rows)
         self.epoch += 1
 
         ones = np.zeros((self.words,), dtype=np.uint32)
         ones[: num_words(n)] = valid_mask(n)
-        self.logical.setdefault(TRUE_PAGE, jnp.asarray(ones))
+        self.logical.setdefault(TRUE_PAGE, ones)
         self.logical.setdefault(
-            FALSE_PAGE, jnp.zeros((self.words,), jnp.uint32)
+            FALSE_PAGE, np.zeros((self.words,), np.uint32)
         )
 
         for col, raw in table.items():
@@ -160,6 +267,7 @@ class BitmapStore:
             self.columns[col] = ColumnIndex(
                 col, tuple(int(v) for v in distinct), bits
             )
+            self.column_epochs[col] = self.column_epochs.get(col, 0) + 1
             for v in distinct:
                 bitsarr = (vals == v).astype(np.uint8)
                 self.logical[eq_page(col, int(v))] = self._pack(bitsarr)
@@ -167,15 +275,193 @@ class BitmapStore:
                 slice_bits = ((vals >> b) & 1).astype(np.uint8)
                 self.logical[bsi_page(col, b)] = self._pack(slice_bits)
 
-    def _pack(self, bits: np.ndarray) -> jax.Array:
-        """Pack a row-bit array, zero-padding words up to ``self.words``."""
-        packed = pack_bits(jnp.asarray(bits))
-        pad = self.words - packed.shape[-1]
-        if pad:
-            packed = jnp.concatenate(
-                [packed, jnp.zeros((pad,), jnp.uint32)]
+    def _pack(self, bits: np.ndarray) -> np.ndarray:
+        """Pack a row-bit array into a host page of ``self.words`` words
+        (LSB-first per word, little word order — same convention as
+        :func:`repro.core.bitops.pack_bits`)."""
+        span = np.zeros((self.words * WORD_BITS,), np.uint8)
+        span[: bits.shape[0]] = bits
+        return np.packbits(span, bitorder="little").view(np.uint32).copy()
+
+    # -- incremental ingest --------------------------------------------------
+    def check_append(self, rows: dict[str, np.ndarray]) -> int:
+        """Validate an append batch WITHOUT mutating anything.
+
+        Returns the batch length.  Raises — at the call site, before any
+        page state or shard queue can be touched — on: an un-ingested
+        store, a column set that does not match the ingest schema (missing
+        *or* unknown columns), ragged column lengths, negative values, and
+        word-capacity overflow.  Both schedulers validate through this up
+        front, so a bad batch can never poison a half-applied append.
+        """
+        if not self.columns:
+            raise ValueError("append() needs an ingested store")
+        b = validate_batch(self.columns, rows)
+        if num_words(self.num_rows + b) > self.words:
+            raise ValueError(
+                f"appending {b} rows to {self.num_rows} overflows the "
+                f"store's {self.words}-word page capacity "
+                f"({self.capacity_rows} rows); ingest with a larger "
+                "reserve_rows to leave append headroom"
             )
-        return packed
+        return b
+
+    def _tail_words(
+        self, name: str, new_bits: np.ndarray, n0: int, b: int
+    ) -> tuple[int, np.ndarray]:
+        """Delta words of a page whose rows ``n0..n0+b-1`` become
+        ``new_bits``: only the words an append touches, with the partial
+        first word preserving the resident rows' bits."""
+        sw = n0 // WORD_BITS
+        ew = num_words(n0 + b)
+        span = np.zeros(((ew - sw) * WORD_BITS,), np.uint8)
+        off = n0 - sw * WORD_BITS
+        span[off : off + b] = new_bits
+        words = np.packbits(span, bitorder="little").view(np.uint32).copy()
+        if off and name in self.logical:
+            old = int(self.logical[name][sw])
+            words[0] |= np.uint32(old & ((1 << off) - 1))
+        return sw, words
+
+    def _apply_words(self, name: str, start: int, words: np.ndarray) -> None:
+        """Mutate only the delta words of a host page — O(delta), never a
+        full-page copy, however wide the store's pages are."""
+        page = self.logical.get(name)
+        if page is None:
+            page = np.zeros((self.words,), np.uint32)
+            self.logical[name] = page
+        page[start : start + words.shape[0]] = words
+
+    def append(
+        self,
+        rows: dict[str, np.ndarray],
+        schema_update: dict[str, tuple[int, ...]] | None = None,
+    ) -> AppendDelta:
+        """Append ``rows`` to the live index; returns the page deltas.
+
+        Only pages an append actually changes appear in the delta:
+
+        * the all-rows page and every page with a set bit among the new
+          rows get their *tail words* reprogrammed in place;
+        * first-seen values get fresh equality pages in the column's
+          reserved (inverted, co-located) layout region, and values wider
+          than the column's BSI index grow fresh slice pages in the BSI
+          region — zero for all resident rows, so no old page is touched.
+
+        Pages with an all-zero delta (values absent from the batch) keep
+        their erased tails and cost nothing.  ``schema_update`` forces the
+        post-append distinct-value set per column (a superset of old ∪
+        batch): a sharded fleet passes the global union so every shard
+        grows the same pages and stays merge-aligned.  Column metadata
+        epochs bump only for columns whose value set / bit width actually
+        changed — plans over untouched columns stay warm.
+        """
+        b = self.check_append(rows)
+        n0 = self.num_rows
+        deltas: list[PageDelta] = []
+
+        if b:
+            sw, words = self._tail_words(
+                TRUE_PAGE, np.ones((b,), np.uint8), n0, b
+            )
+            self._apply_words(TRUE_PAGE, sw, words)
+            deltas.append(PageDelta(TRUE_PAGE, sw, words))
+
+        for col, ci in self.columns.items():
+            vals = np.asarray(rows[col])
+            forced = (
+                schema_update.get(col, ()) if schema_update is not None else ()
+            )
+            new_values = sorted(
+                ({int(v) for v in vals} | {int(v) for v in forced})
+                - set(ci.values)
+            )
+            all_values = tuple(sorted(set(ci.values) | set(new_values)))
+            bits = max(
+                ci.bits,
+                max((int(v).bit_length() for v in all_values), default=1),
+            )
+            # equality bitmaps: tails of existing pages with hits, fresh
+            # pages (zero for resident rows) for first-seen values
+            if b:
+                for v in sorted({int(v) for v in vals} & set(ci.values)):
+                    hit = (vals == v).astype(np.uint8)
+                    sw, words = self._tail_words(eq_page(col, v), hit, n0, b)
+                    self._apply_words(eq_page(col, v), sw, words)
+                    deltas.append(PageDelta(eq_page(col, v), sw, words))
+            for v in new_values:
+                eq_bits = np.zeros((n0 + b,), np.uint8)
+                if b:
+                    eq_bits[n0:] = (vals == v).astype(np.uint8)
+                full = self._pack(eq_bits)
+                self.logical[eq_page(col, v)] = full
+                deltas.append(
+                    PageDelta(
+                        eq_page(col, v),
+                        0,
+                        full,
+                        new=True,
+                        region=eq_region(col),
+                        inverted=True,
+                    )
+                )
+            # BSI slices: tails of existing slices with set bits, fresh
+            # slices for a grown bit width (resident rows are all zero
+            # there by construction: every old value < 2^old_bits)
+            if b:
+                for bit in range(ci.bits):
+                    sl = ((vals >> bit) & 1).astype(np.uint8)
+                    if not sl.any():
+                        continue
+                    sw, words = self._tail_words(
+                        bsi_page(col, bit), sl, n0, b
+                    )
+                    self._apply_words(bsi_page(col, bit), sw, words)
+                    deltas.append(PageDelta(bsi_page(col, bit), sw, words))
+            for new_bit in range(ci.bits, bits):
+                slice_bits = np.zeros((n0 + b,), np.uint8)
+                if b:
+                    slice_bits[n0:] = ((vals >> new_bit) & 1).astype(
+                        np.uint8
+                    )
+                full = self._pack(slice_bits)
+                self.logical[bsi_page(col, new_bit)] = full
+                deltas.append(
+                    PageDelta(
+                        bsi_page(col, new_bit),
+                        0,
+                        full,
+                        new=True,
+                        region=bsi_region(col),
+                        inverted=False,
+                    )
+                )
+            if new_values or bits != ci.bits:
+                self.columns[col] = ColumnIndex(col, all_values, bits)
+                self.column_epochs[col] = self.column_epochs.get(col, 0) + 1
+
+        self.num_rows = n0 + b
+        if b or deltas:
+            self.epoch += 1
+        return AppendDelta(rows=b, start_row=n0, pages=tuple(deltas))
+
+    def program_delta(self, array, delta: AppendDelta) -> None:
+        """ESP-program an append's page deltas into ``array``.
+
+        New pages are placed into their column's reserved layout region
+        (keeping the §6.3 inverted/plain co-location invariants) and
+        programmed whole; existing pages get a single delta-page program
+        covering only their tail words (``fc_append``).
+        """
+        for pd in delta.pages:
+            if pd.new:
+                if pd.name not in array.layout:
+                    array.layout.place_colocated(
+                        [pd.name], inverted=pd.inverted, region=pd.region
+                    )
+                array.fc_write(pd.name, pd.words, esp=True)
+            else:
+                array.fc_append(pd.name, pd.words, start=pd.start)
 
     # -- program ------------------------------------------------------------
     def place_into(self, layout, warmup: Iterable[Query] = ()) -> None:
@@ -202,14 +488,18 @@ class BitmapStore:
                 if eq_page(col, v) not in layout
             ]
             if eq_new:
-                layout.place_colocated(eq_new, inverted=True)
+                layout.place_colocated(
+                    eq_new, inverted=True, region=eq_region(col)
+                )
             bsi_new = [
                 bsi_page(col, b)
                 for b in range(ci.bits)
                 if bsi_page(col, b) not in layout
             ]
             if bsi_new:
-                layout.place_colocated(bsi_new, inverted=False)
+                layout.place_colocated(
+                    bsi_new, inverted=False, region=bsi_region(col)
+                )
         for const in (TRUE_PAGE, FALSE_PAGE):
             if const in self.logical and const not in layout:
                 layout.place_colocated([const], inverted=False)

@@ -12,10 +12,20 @@ Lowering rules:
 * ``And`` / ``Or`` / ``Not`` -> ``and_`` / ``or_`` / ``not_``.
 
 The compiler memoizes :class:`CommandPlan`s keyed on **expression structure
-+ leaf placement** (+ the store's ingest epoch): repeated query shapes skip
-the Planner, and — because structurally identical plans gather the same
-slot patterns — land in the same vectorized batch of
++ leaf placement + leaf-region epochs**: repeated query shapes skip the
+Planner, and — because structurally identical plans gather the same slot
+patterns — land in the same vectorized batch of
 :class:`repro.query.device.FlashDevice`.
+
+The epoch components are *region-granular* (one region per column, see
+:func:`repro.core.store.page_region`): a key carries, for every region its
+leaves touch, the column's index-metadata epoch (distinct values / BSI
+width — what lowering depends on) and the device store's region epoch
+(full page reprograms).  Incremental appends bump neither unless they
+introduce a new value or bit slice in that column, so appending to column
+A leaves plans that only touch column B warm — and delta-page programs
+never invalidate any plan at all (plans gather by slot, and appends only
+extend page tails).
 """
 
 from __future__ import annotations
@@ -26,6 +36,7 @@ from repro.core.commands import CommandPlan
 from repro.core.expr import Expr, Node, Page, and_, leaves, not_, or_
 from repro.core.placement import auto_layout
 from repro.core.planner import Planner
+from repro.core.store import page_region
 from repro.query.ast import And, Eq, In, Not, Or, Pred, Query, Range
 from repro.query.bitmap import (
     FALSE_PAGE,
@@ -140,23 +151,43 @@ class QueryCompiler:
     _plans: dict[tuple, CommandPlan] = field(default_factory=dict)
     hits: int = 0
     misses: int = 0
-    _live_epochs: tuple | None = None
+    _live_versions: tuple | None = None
     # front cache keyed on the (frozen, hashable) Query itself: repeated
     # queries skip lowering + structural keying entirely, not just the
-    # Planner.  Cleared whenever either epoch moves.
+    # Planner.  Cleared whenever either content version moves (cheap to
+    # rebuild: the next compile re-lowers and usually hits ``_plans``).
     _by_query: dict = field(default_factory=dict, repr=False)
 
+    def epoch_sig(self, regions: tuple[str, ...]) -> tuple:
+        """Current ``(region, column epoch, device region epoch)`` triple
+        per region — the epoch components of a plan-cache key."""
+        ce = self.store.column_epochs
+        de = self.array.store.region_epochs
+        return tuple((r, ce.get(r, 0), de.get(r, 0)) for r in regions)
+
+    def key_fresh(self, key: tuple) -> bool:
+        """Whether a plan-cache key's leaf-region epochs are all current.
+
+        Exec/batch caches keyed on plan-cache keys prune through this: a
+        stale key can never be produced by ``compile`` again.
+        """
+        sig = key[2]
+        return sig == self.epoch_sig(tuple(r for r, _, _ in sig))
+
     def compile(self, query: Query) -> CompiledQuery:
-        epochs = (self.store.epoch, self.array.store.epoch)
-        if epochs != self._live_epochs:
-            # an epoch bump leaves every prior-generation entry permanently
-            # unreachable; evict them so long-running serving with periodic
-            # reprograms doesn't grow the caches one plan set per mutation
+        versions = (self.store.epoch, self.array.store.epoch)
+        if versions != self._live_versions:
+            # some mutation happened (ingest/append/reprogram): evict plans
+            # whose leaf regions moved — they are permanently unreachable —
+            # and clear the query front cache (its entries bypass lowering,
+            # which may now resolve differently).  Plans over untouched
+            # regions survive, which is what keeps serving warm across
+            # incremental appends.
             self._plans = {
-                k: v for k, v in self._plans.items() if k[2:] == epochs
+                k: v for k, v in self._plans.items() if self.key_fresh(k)
             }
             self._by_query.clear()
-            self._live_epochs = epochs
+            self._live_versions = versions
         cached = self._by_query.get(query)
         if cached is not None:
             self.hits += 1
@@ -167,15 +198,16 @@ class QueryCompiler:
             # late-placed pages (e.g. constants written after warmup) get
             # the §6.3 context-sensitive placement before planning
             auto_layout(expr, layout)
-        placements = tuple(
-            (p.name, layout[p.name]) for p in sorted(set(leaves(expr)), key=lambda p: p.name)
+        pages = sorted(set(leaves(expr)), key=lambda p: p.name)
+        placements = tuple((p.name, layout[p.name]) for p in pages)
+        # The epoch components cover exactly the regions (columns) the
+        # plan's leaves touch: mutating one column — or, in a sharded
+        # deployment, one device — invalidates only the plans that sense
+        # it, while every other cached plan stays warm.
+        regions = tuple(
+            sorted({page_region(p.name) for p in pages} - {None})
         )
-        # Two epochs key the cache: the BitmapStore's ingest epoch (distinct
-        # values / lowering may change) and the device PackedStore's mutation
-        # epoch (page contents reprogrammed).  The latter is per *device*, so
-        # in a sharded deployment mutating one shard invalidates only that
-        # shard's plans while the other shards' caches stay warm.
-        key = (expr_key(expr), placements) + epochs
+        key = (expr_key(expr), placements, self.epoch_sig(regions))
         plan = self._plans.get(key)
         hit = plan is not None
         if hit:

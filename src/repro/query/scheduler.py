@@ -45,14 +45,16 @@ from repro.query.device import FlashDevice
 AGG_READ_SHAPE = MWSCommandShape(n_blocks=1, max_wls_per_block=1)
 
 
-def prune_stale_execs(cache: dict, epochs: tuple[int, int]) -> None:
-    """Drop ExecPlan-cache entries from superseded epochs.
+def prune_stale_execs(cache: dict, fresh) -> None:
+    """Drop ExecPlan-cache entries whose plan keys went stale.
 
-    Exec caches key on the compiler's plan-cache key, whose last two
-    components are the (BitmapStore, PackedStore) epochs — once either
-    bumps, old-generation entries are unreachable forever.
+    Exec caches key on the compiler's plan-cache key, whose third
+    component carries the leaf-region epochs (column metadata + device
+    region) — once any of a key's regions moves, that key can never be
+    produced by ``compile`` again.  ``fresh`` is the owning compiler's
+    :meth:`QueryCompiler.key_fresh`.
     """
-    stale = [k for k in cache if k[2:] != epochs]
+    stale = [k for k in cache if not fresh(k)]
     for k in stale:
         del cache[k]
 
@@ -86,6 +88,7 @@ def project_traffic(
     num_rows: int,
     num_queries: int,
     host_postprocess: bool,
+    esp_programs: int = 0,
     ssd: SSDConfig = DEFAULT_SSD,
     name: str = "flashql",
 ) -> dict:
@@ -95,14 +98,23 @@ def project_traffic(
     device's traffic separately and aggregates — time as the max over
     concurrently-serving devices, energy as the sum (see
     ``repro.query.shard``).
+
+    ``esp_programs`` counts the *delta* page programs incremental appends
+    issued — only the pages an update actually touched, never a full
+    reprogram of the index.  They are charged at ``t_esp_us`` on the
+    Flash-Cosmos side (ESP reliability costs ~2x a plain SLC program) and
+    at ``t_prog_slc_us`` for the OSP baseline, which rewrites the same
+    pages through the ordinary program path.
     """
-    if not command_shape_counts:
+    if not command_shape_counts and not esp_programs:
         raise ValueError("no traffic served yet")
     wl = BulkBitwiseWorkload(
         name=name,
         num_operands=wordlines_sensed,
         operand_bits=num_rows,
-        result_bits=num_rows * num_queries,
+        # a program-only projection (appends landed on a stripe that never
+        # sensed) streams no result bitmaps out
+        result_bits=num_rows * (num_queries if command_shape_counts else 0),
         num_queries=1,  # shape counts already cover ALL served queries
         host_postprocess=host_postprocess,
         fc_command_counts=tuple(command_shape_counts.items()),
@@ -110,14 +122,21 @@ def project_traffic(
     )
     fc = run_workload(wl, Platform.FC, ssd)
     osp = run_workload(wl, Platform.OSP, ssd)
+    t_esp = esp_programs * ssd.t_esp_us * 1e-6
+    t_prog_osp = esp_programs * ssd.t_prog_slc_us * 1e-6
+    fc_time = fc.time_s + t_esp
+    osp_time = osp.time_s + t_prog_osp
+    fc_energy = fc.energy_j + t_esp * ssd.p_prog_w
+    osp_energy = osp.energy_j + t_prog_osp * ssd.p_prog_w
     return {
         "workload": wl.name,
-        "fc_time_s": fc.time_s,
-        "fc_energy_j": fc.energy_j,
-        "osp_time_s": osp.time_s,
-        "osp_energy_j": osp.energy_j,
-        "speedup_vs_osp": osp.time_s / fc.time_s,
-        "energy_ratio_vs_osp": osp.energy_j / fc.energy_j,
+        "fc_time_s": fc_time,
+        "fc_energy_j": fc_energy,
+        "osp_time_s": osp_time,
+        "osp_energy_j": osp_energy,
+        "esp_programs": esp_programs,
+        "speedup_vs_osp": osp_time / fc_time,
+        "energy_ratio_vs_osp": osp_energy / fc_energy,
     }
 
 
@@ -157,6 +176,10 @@ class BatchScheduler:
     eager_plans: int = 0
     serve_time_s: float = 0.0
     total_latency_s: float = 0.0
+    # incremental ingest: appended rows and the delta pages they programmed
+    # (the projection charges exactly these, never a full index reprogram)
+    rows_appended: int = 0
+    esp_delta_programs: int = 0
     # executed traffic, aggregated per command shape (bounded memory even
     # for a long-running service); wordlines tracked exactly because ragged
     # commands pad to max_wls_per_block and must not inflate operand counts
@@ -175,6 +198,30 @@ class BatchScheduler:
     def __post_init__(self):
         if self.compiler is None:
             self.compiler = QueryCompiler(self.store, self.device)
+
+    # -- incremental ingest --------------------------------------------------
+    def append(self, rows: dict[str, object]) -> int:
+        """Append rows to the live index; returns pages ESP-programmed.
+
+        The whole batch is validated against the ingest schema (exact
+        column set, equal lengths, non-negative values, word capacity)
+        *before* any page state mutates, and appends are rejected while
+        queries are pending — a half-applied batch could otherwise serve a
+        flush from a torn index.  Only delta pages are programmed: the
+        tail words of pages the new rows actually set, plus fresh pages
+        for first-seen values / grown BSI widths.  Plans over columns
+        whose index metadata did not change stay warm in the plan cache.
+        """
+        if self._pending:
+            raise RuntimeError(
+                f"append() with {len(self._pending)} queries pending; "
+                "flush() first so no ticket spans the mutation"
+            )
+        delta = self.store.append(rows)  # validates before mutating
+        self.store.program_delta(self.device, delta)
+        self.rows_appended += delta.rows
+        self.esp_delta_programs += delta.num_programs
+        return delta.num_programs
 
     # -- admission ----------------------------------------------------------
     def submit(self, query: Query) -> int:
@@ -210,7 +257,7 @@ class BatchScheduler:
         execs = []
         for cq in compiled:
             if cq.key not in self._exec_cache:
-                prune_stale_execs(self._exec_cache, cq.key[2:])
+                prune_stale_execs(self._exec_cache, self.compiler.key_fresh)
                 self._exec_cache[cq.key] = self.device.build_exec(cq.plan)
             execs.append(self._exec_cache[cq.key])
         if self._mask_cache is None or self._mask_cache[0] != self.store.epoch:
@@ -303,6 +350,8 @@ class BatchScheduler:
             ),
             "mean_latency_s": self.total_latency_s / served,
             "mws_commands": sum(self.command_shape_counts.values()),
+            "rows_appended": self.rows_appended,
+            "esp_delta_programs": self.esp_delta_programs,
         }
 
     def projection(self, ssd: SSDConfig = DEFAULT_SSD) -> dict:
@@ -319,6 +368,7 @@ class BatchScheduler:
             num_rows=self.store.num_rows,
             num_queries=self.queries_served,
             host_postprocess=self._host_postprocess,
+            esp_programs=self.esp_delta_programs,
             ssd=ssd,
             name=f"flashql({self.queries_served}q)",
         )

@@ -35,9 +35,20 @@ independent :class:`repro.query.device.FlashDevice`s — round-robin
   overlapping values on that shard) *before* scatter: the shard never
   senses, and its partial is the aggregate's empty value.
 
+* **appends** — :meth:`ShardedFlashQL.append` extends the live fleet:
+  round-robin fleets stripe the tail rows onward (row ``j`` -> shard
+  ``j % N``), ``stripe_key`` fleets route each row to the stripe owning
+  its key range (keys past every range overflow into the last stripe),
+  and plain ``range`` fleets extend the tail stripe.  Every stripe
+  programs only its delta pages; first-seen values propagate to ALL
+  shards as a forced schema update so aggregate shard-merges stay
+  value-aligned, and ``shard_values``/``stripe_bounds`` track the new
+  rows so range pruning stays sound.
+
 ``projection()`` replays each device's executed traffic through the
 flashsim timing/energy model and aggregates over the fleet — wall-clock
-as the max over concurrently-serving chips, energy as the sum.
+as the max over concurrently-serving chips, energy as the sum — charging
+appends for exactly the delta pages they ESP-programmed.
 """
 
 from __future__ import annotations
@@ -61,7 +72,7 @@ from repro.query.aggregate import (
     validate_query,
 )
 from repro.query.ast import And, Eq, In, Or, Pred, Query, Range
-from repro.query.bitmap import BitmapStore
+from repro.query.bitmap import BitmapStore, validate_batch
 from repro.query.compile import QueryCompiler
 from repro.query.device import (
     FlashDevice,
@@ -166,6 +177,9 @@ class ShardedBitmapStore:
     num_shards: int
     policy: str = "roundrobin"
     stripe_key: str | None = None
+    # row capacity reserved for appends (shared headroom: any stripe may
+    # absorb the whole budget, since stripe-key routing is data-dependent)
+    reserve_rows: int = 0
     shards: list[BitmapStore] = field(default_factory=list)
     row_maps: list[np.ndarray] = field(default_factory=list)
     num_rows: int = 0
@@ -173,6 +187,11 @@ class ShardedBitmapStore:
     # values actually PRESENT on each shard (the shard-local stores carry
     # the forced global schema, so routing needs this recorded separately)
     shard_values: list[dict[str, tuple[int, ...]]] = field(
+        default_factory=list
+    )
+    # per-shard (lo, hi) of the stripe key (stripe_key fleets): appends
+    # route to the stripe owning their key range (see :meth:`append`)
+    stripe_bounds: list[tuple[int, int] | None] = field(
         default_factory=list
     )
 
@@ -225,9 +244,14 @@ class ShardedBitmapStore:
         else:
             self.row_maps = stripe_rows(n, self.num_shards, self.policy)
         fleet_words = max(
-            (_num_words(len(rows)) for rows in self.row_maps), default=0
+            (
+                _num_words(len(rows) + self.reserve_rows)
+                for rows in self.row_maps
+            ),
+            default=0,
         )
         self.shard_values = [{} for _ in range(self.num_shards)]
+        self.stripe_bounds = [None] * self.num_shards
         for s, (store, rows) in enumerate(zip(self.shards, self.row_maps)):
             if not len(rows):
                 continue
@@ -236,8 +260,109 @@ class ShardedBitmapStore:
                 col: tuple(int(v) for v in np.unique(vals))
                 for col, vals in sub.items()
             }
+            if self.stripe_key is not None:
+                keys = sub[self.stripe_key]
+                self.stripe_bounds[s] = (int(keys.min()), int(keys.max()))
             store.min_words = fleet_words
-            store.ingest(sub, schema=self.schema)
+            store.ingest(
+                sub, schema=self.schema, reserve_rows=self.reserve_rows
+            )
+
+    # -- incremental ingest --------------------------------------------------
+    def append(self, rows: dict[str, np.ndarray]) -> dict[int, object]:
+        """Route an append batch to its stripes; returns per-shard deltas.
+
+        Routing by policy: ``roundrobin`` continues the stripe sequence
+        (global row ``j`` -> shard ``j % num_shards``); a ``stripe_key``
+        fleet routes each row to the stripe *owning* its key (the first
+        stripe whose recorded key range reaches the key) with keys beyond
+        every range overflowing into the last stripe; plain ``range``
+        appends extend the tail stripe (new rows hold the highest global
+        positions).  The whole batch — column set, lengths, values, and
+        every destination shard's word capacity — is validated before any
+        shard mutates.
+
+        New values are propagated to EVERY active shard as a forced
+        schema update (all-zero equality pages where absent), keeping
+        value order aligned fleet-wide so aggregate shard-merges stay
+        correct; ``shard_values`` records only the values actually
+        present per stripe, so range routing keeps pruning soundly.
+        """
+        if not self.num_rows:
+            raise ValueError("append() needs an ingested store")
+        b = validate_batch(self.schema, rows)
+        arrays = {col: np.asarray(v) for col, v in rows.items()}
+        n0 = self.num_rows
+        active = self.active
+        act = np.asarray(active, np.int64)
+
+        # -- destination stripe per appended row
+        if self.policy == "roundrobin":
+            if len(active) == self.num_shards:
+                dest = (n0 + np.arange(b)) % self.num_shards
+            else:  # short table left trailing shards empty (never ingested)
+                dest = act[(n0 + np.arange(b)) % len(active)]
+        elif self.stripe_key is not None:
+            his = np.asarray(
+                [self.stripe_bounds[s][1] for s in active], np.int64
+            )
+            keys = arrays[self.stripe_key]
+            owner = np.minimum(
+                np.searchsorted(his, keys), len(active) - 1
+            )  # past every range -> overflow into the last stripe
+            dest = act[owner]
+        else:  # plain range: the tail stripe owns all new positions
+            dest = np.full((b,), active[-1], np.int64)
+
+        new_schema = {
+            col: tuple(
+                sorted(set(vs) | {int(v) for v in arrays[col]})
+            )
+            for col, vs in self.schema.items()
+        }
+        changed = new_schema != self.schema
+
+        # -- validate every destination BEFORE any shard mutates
+        subs: dict[int, tuple[dict[str, np.ndarray], np.ndarray]] = {}
+        for s in active:
+            picked = np.flatnonzero(dest == s)
+            subs[s] = (
+                {col: arr[picked] for col, arr in arrays.items()},
+                picked,
+            )
+        for s in active:
+            sub, picked = subs[s]
+            if len(picked) or changed:
+                self.shards[s].check_append(sub)
+
+        # -- mutate
+        deltas: dict[int, object] = {}
+        for s in active:
+            sub, picked = subs[s]
+            if not len(picked) and not changed:
+                continue
+            deltas[s] = self.shards[s].append(sub, schema_update=new_schema)
+            if not len(picked):
+                continue
+            self.row_maps[s] = np.concatenate(
+                [self.row_maps[s], n0 + picked]
+            )
+            sv = dict(self.shard_values[s])
+            for col, arr in sub.items():
+                sv[col] = tuple(
+                    sorted(set(sv.get(col, ())) | {int(v) for v in arr})
+                )
+            self.shard_values[s] = sv
+            if self.stripe_key is not None:
+                lo, hi = self.stripe_bounds[s]
+                keys = sub[self.stripe_key]
+                self.stripe_bounds[s] = (
+                    min(lo, int(keys.min())),
+                    max(hi, int(keys.max())),
+                )
+        self.schema = new_schema
+        self.num_rows = n0 + b
+        return deltas
 
     # -- program ------------------------------------------------------------
     def program(
@@ -311,6 +436,10 @@ class ShardedFlashQL:
     total_latency_s: float = 0.0
     shard_traffic: list[Counter] = field(default_factory=list)
     shard_wordlines: list[int] = field(default_factory=list)
+    # incremental ingest: appended rows and per-shard delta page programs
+    rows_appended: int = 0
+    esp_delta_programs: int = 0
+    shard_esp_programs: list[int] = field(default_factory=list)
     _host_postprocess: bool = False
 
     def __post_init__(self):
@@ -327,6 +456,39 @@ class ShardedFlashQL:
             Counter() for _ in range(self.store.num_shards)
         ]
         self.shard_wordlines = [0] * self.store.num_shards
+        self.shard_esp_programs = [0] * self.store.num_shards
+
+    # -- incremental ingest --------------------------------------------------
+    def append(self, rows: dict[str, np.ndarray]) -> int:
+        """Append rows to the live fleet; returns pages ESP-programmed.
+
+        The batch is validated — column set against the global ingest
+        schema, lengths, values, and every destination stripe's capacity —
+        *before* any shard queue or page state mutates, and appends are
+        rejected while tickets are in flight (a ticket gathered across
+        the mutation could merge partials from different index versions).
+        Each stripe programs only its delta pages; plans over columns
+        whose index metadata did not change stay warm on every shard.
+        """
+        if self._meta:
+            raise RuntimeError(
+                f"append() with {len(self._meta)} tickets in flight; "
+                "flush() the fleet first so no ticket spans the mutation"
+            )
+        deltas = self.store.append(rows)  # validates before mutating
+        pages = 0
+        for s, delta in deltas.items():
+            self.store.shards[s].program_delta(self.devices[s], delta)
+            self.shard_esp_programs[s] += delta.num_programs
+            pages += delta.num_programs
+            self.rows_appended += delta.rows
+        self.esp_delta_programs += pages
+        # row counts moved: host-side valid-row masks and their
+        # device-resident stacks are stale (the fleet snapshot stack and
+        # extras caches invalidate through the stores' content epochs)
+        self._masks = None
+        self._maskmat_cache.clear()
+        return pages
 
     # -- admission ----------------------------------------------------------
     def submit(self, query: Query) -> int:
@@ -436,7 +598,7 @@ class ShardedFlashQL:
                 cq = self.compilers[s].compile(q)
                 self._cache_hits[ticket] &= cq.cache_hit
                 if cq.key not in cache:
-                    prune_stale_execs(cache, cq.key[2:])
+                    prune_stale_execs(cache, self.compilers[s].key_fresh)
                     cache[cq.key] = self.devices[s].build_exec(cq.plan)
                 items.append((s, ticket, cache[cq.key]))
                 plans.append(cq.plan)
@@ -629,6 +791,8 @@ class ShardedFlashQL:
             "mws_commands": sum(
                 sum(c.values()) for c in self.shard_traffic
             ),
+            "rows_appended": self.rows_appended,
+            "esp_delta_programs": self.esp_delta_programs,
         }
 
     def projection(self, ssd: SSDConfig = DEFAULT_SSD) -> dict:
@@ -646,11 +810,15 @@ class ShardedFlashQL:
                 num_rows=self.store.shards[s].num_rows,
                 num_queries=self.queries_served,
                 host_postprocess=self._host_postprocess,
+                esp_programs=self.shard_esp_programs[s],
                 ssd=ssd,
                 name=f"flashql-shard{s}({self.queries_served}q)",
             )
             for s in self.store.active
-            if self.shard_traffic[s]
+            # a stripe with appends but no sensed traffic still did real
+            # programming work — charge it (project_traffic handles the
+            # program-only case)
+            if self.shard_traffic[s] or self.shard_esp_programs[s]
         ]
         if not per_shard:
             raise ValueError("no traffic served yet")
@@ -684,11 +852,17 @@ def build_sharded_flashql(
     warmup: Iterable[Query] = (),
     queue_depth: int = 256,
     interpret: bool = True,
+    reserve_rows: int = 0,
 ) -> ShardedFlashQL:
     """Ingest ``table``, program ``num_shards`` fresh devices, return the
-    serving frontend — the one-call path used by tests and benchmarks."""
+    serving frontend — the one-call path used by tests and benchmarks.
+    ``reserve_rows`` leaves per-stripe word capacity for later
+    :meth:`ShardedFlashQL.append` batches."""
     store = ShardedBitmapStore(
-        num_shards=num_shards, policy=policy, stripe_key=stripe_key
+        num_shards=num_shards,
+        policy=policy,
+        stripe_key=stripe_key,
+        reserve_rows=reserve_rows,
     )
     store.ingest(table)
     devices = [

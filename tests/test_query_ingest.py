@@ -1,0 +1,420 @@
+"""Incremental-ingest unit coverage: delta-page programming + epochs.
+
+The mutable-FlashQL contract, asserted piece by piece:
+
+* appending B rows to an N-row store programs O(B) pages — the flashsim
+  ESP-program counter must report the SAME page count for the same batch
+  on a 10x bigger store, and far fewer pages than a full reprogram;
+* appends that introduce no new index metadata leave EVERY cached plan
+  warm, and a first-seen value in column A invalidates only plans that
+  sense column A (region-granular plan-cache epochs);
+* a bad append batch (schema mismatch, ragged, negative, over capacity)
+  is rejected at the call site on BOTH schedulers before any shard queue
+  or page state mutates;
+* appends route correctly on sharded fleets (round-robin tail striping,
+  stripe-key owning/overflow stripes) and keep range pruning sound;
+* `Layout` regions keep appended pages co-located with their column and
+  fork in lockstep for shard-canonical layouts.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.placement import Layout
+from repro.core.store import PackedStore, page_region
+from repro.query import (
+    Agg,
+    BatchScheduler,
+    BitmapStore,
+    Eq,
+    FlashDevice,
+    GroupBy,
+    In,
+    Query,
+    Range,
+    Sum,
+    build_sharded_flashql,
+)
+from repro.query.ast import Count
+from repro.query.bitmap import bsi_region, eq_region
+
+
+def _scheduler(table, reserve=128, planes=2):
+    store = BitmapStore()
+    store.ingest(table, reserve_rows=reserve)
+    dev = FlashDevice(num_planes=planes)
+    store.program(dev)
+    return BatchScheduler(dev, store)
+
+
+# ---------------------------------------------------------------------------
+# core epoch/region plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_page_region_naming():
+    assert page_region("country=3") == "country"
+    assert page_region("age#5") == "age"
+    assert page_region("__all") == "__all"
+    assert page_region("__scratch0") is None
+
+
+def test_packed_store_region_epochs_vs_append_words():
+    st = PackedStore()
+    st["a=1"] = np.zeros(4, np.uint32)
+    st["b=1"] = np.zeros(4, np.uint32)
+    assert st.region_epochs == {"a": 1, "b": 1}
+    e = st.epoch
+    # full reprogram bumps the page's region (plan caches invalidate)
+    st["a=1"] = np.ones(4, np.uint32)
+    assert st.region_epochs == {"a": 2, "b": 1}
+    assert st.epoch > e
+    # delta append bumps ONLY the content version: compiled plans gather
+    # by slot and stay valid, snapshot-level caches must refresh
+    e = st.epoch
+    st.append_words("b=1", np.asarray([7], np.uint32), start=3)
+    assert st.region_epochs == {"a": 2, "b": 1}
+    assert st.epoch == e + 1
+    assert int(np.asarray(st["b=1"])[3]) == 7
+    # scratch writes bump neither
+    st["__scratch0"] = np.zeros(4, np.uint32)
+    assert st.epoch == e + 1
+
+
+def test_append_words_rejects_out_of_range():
+    st = PackedStore()
+    st["a=1"] = np.zeros(4, np.uint32)
+    with pytest.raises(ValueError, match="out of range"):
+        st.append_words("a=1", np.zeros(2, np.uint32), start=3)
+
+
+def test_layout_regions_append_colocated_and_fork_in_lockstep():
+    lay = Layout()
+    lay.place_colocated(["c=0", "c=1"], inverted=True, region=eq_region("c"))
+    block = lay["c=0"].block
+    fork = lay.fork()
+    # appended pages continue the region's block on BOTH layouts
+    (p1,) = lay.place_colocated(
+        ["c=2"], inverted=True, region=eq_region("c")
+    )
+    (p2,) = fork.place_colocated(
+        ["c=2"], inverted=True, region=eq_region("c")
+    )
+    assert p1 == p2
+    assert p1.block == block and p1.wordline == 2 and p1.inverted
+    # a different region never shares the block
+    (p3,) = lay.place_colocated(["c#0"], region=bsi_region("c"))
+    assert p3.block != block
+
+
+# ---------------------------------------------------------------------------
+# O(B) delta programming — the flashsim ESP-program counter
+# ---------------------------------------------------------------------------
+
+
+def _counted_append(n, batch, seed=3):
+    rng = np.random.default_rng(seed)
+    table = {"c": rng.integers(0, 8, n), "v": rng.integers(0, 64, n)}
+    table["c"][:8] = np.arange(8)  # same value universe at every n
+    table["v"][:2] = [0, 63]
+    sched = _scheduler(table)
+    before = sched.device.esp_programs
+    sched.append(batch)
+    return sched, sched.device.esp_programs - before
+
+
+def test_append_programs_scale_with_delta_not_total_rows():
+    rng = np.random.default_rng(4)
+    batch = {"c": rng.integers(0, 8, 16), "v": rng.integers(0, 64, 16)}
+    _, p_small = _counted_append(400, batch)
+    large, p_large = _counted_append(4000, batch)
+    # O(B), not O(N): the same 16-row batch programs the SAME page count
+    # on a 10x bigger store
+    assert p_small == p_large > 0
+    # and each append touches at most the pages the batch can set bits in:
+    # the all-rows page + per column min(B, cardinality) equality tails +
+    # its BSI slices — never the whole index
+    bound = 1 + (min(16, 8) + 3) + (min(16, 64) + 6)
+    assert p_large <= bound
+    assert p_large < len(large.store.logical) // 2
+    assert large.stats()["esp_delta_programs"] == p_large
+    assert large.stats()["rows_appended"] == 16
+
+
+def test_zero_delta_pages_are_not_programmed():
+    table = {"c": np.array([0, 1, 2, 3] * 10)}
+    sched = _scheduler(table)
+    before = sched.device.esp_programs
+    # batch holds only value 0: pages c=1..3 keep their erased tails and
+    # slices #0/#1 have no set bits -> only __all + c=0 program
+    pages = sched.append({"c": np.zeros(4, np.int64)})
+    assert pages == sched.device.esp_programs - before == 2
+
+
+def test_projection_counts_delta_esp_programs():
+    table = {"c": np.arange(40) % 5}
+    sched = _scheduler(table)
+    sched.serve([Query(Eq("c", 1))])
+    sched.append({"c": np.array([1, 1, 4])})
+    proj = sched.projection()
+    assert proj["esp_programs"] == sched.esp_delta_programs > 0
+
+
+# ---------------------------------------------------------------------------
+# region-granular plan-cache warmth (the acceptance assertion)
+# ---------------------------------------------------------------------------
+
+
+def test_append_to_one_column_leaves_disjoint_plans_warm():
+    rng = np.random.default_rng(5)
+    table = {"a": rng.integers(0, 4, 80), "b": rng.integers(0, 4, 80)}
+    sched = _scheduler(table)
+    qa, qb = Query(Eq("a", 1)), Query(In("b", [0, 2]))
+    sched.serve([qa, qb])
+    assert sched.compiler.misses == 2
+
+    # value-stable append: no column metadata moves, EVERY plan stays warm
+    sched.append({"a": np.array([1, 2]), "b": np.array([0, 3])})
+    res = sched.serve([qa, qb])
+    assert sched.compiler.misses == 2
+    assert all(r.cache_hit for r in res)
+
+    # first-seen value in column a: only the a-plan recompiles
+    sched.append({"a": np.array([9]), "b": np.array([0])})
+    res = sched.serve([qa, qb])
+    assert sched.compiler.misses == 3
+    assert [r.cache_hit for r in res] == [False, True]
+
+    # and the recompiled plan serves the appended rows
+    (r,) = sched.serve([Query(Eq("a", 9))])
+    assert r.count == 1
+
+
+def test_sharded_stable_append_keeps_every_shard_warm():
+    rng = np.random.default_rng(6)
+    table = {"a": rng.integers(0, 4, 90), "b": rng.integers(0, 4, 90)}
+    sq = build_sharded_flashql(table, 3, num_planes=2, reserve_rows=96)
+    qs = [Query(Eq("a", 1)), Query(In("b", [0, 2]))]
+    sq.serve(qs)
+    misses = [c.misses for c in sq.compilers]
+    sq.append({"a": np.array([1, 0, 2]), "b": np.array([3, 3, 1])})
+    sq.serve(qs)
+    assert [c.misses for c in sq.compilers] == misses
+    assert all(c.hits >= 2 for c in sq.compilers)
+
+
+# ---------------------------------------------------------------------------
+# validation: reject at the call site, before any state mutates
+# ---------------------------------------------------------------------------
+
+
+def _assert_untouched(sched, num_rows, esp, epoch):
+    assert sched.store.num_rows == num_rows
+    assert sched.device.esp_programs == esp
+    assert sched.device.store.epoch == epoch
+
+
+@pytest.mark.parametrize(
+    "bad,match",
+    [
+        ({"a": np.array([1])}, "missing"),
+        (
+            {"a": np.array([1]), "b": np.array([2]), "x": np.array([3])},
+            "unknown",
+        ),
+        ({"a": np.array([1, 2]), "b": np.array([0])}, "ragged"),
+        ({"a": np.array([1]), "b": np.array([-3])}, "negative"),
+        ({"a": np.zeros(10_000, np.int64), "b": np.zeros(10_000, np.int64)},
+         "reserve_rows"),
+    ],
+)
+def test_batch_scheduler_rejects_bad_appends_before_mutation(bad, match):
+    table = {"a": np.arange(20) % 3, "b": np.arange(20) % 2}
+    sched = _scheduler(table, reserve=32)
+    state = (
+        sched.store.num_rows,
+        sched.device.esp_programs,
+        sched.device.store.epoch,
+    )
+    with pytest.raises(ValueError, match=match):
+        sched.append(bad)
+    _assert_untouched(sched, *state)
+
+
+@pytest.mark.parametrize(
+    "bad,match",
+    [
+        ({"a": np.array([1])}, "missing"),
+        (
+            {"a": np.array([1]), "b": np.array([2]), "x": np.array([3])},
+            "unknown",
+        ),
+        ({"a": np.array([1, 2]), "b": np.array([0])}, "ragged"),
+        ({"a": np.array([1]), "b": np.array([-3])}, "negative"),
+        ({"a": np.zeros(10_000, np.int64), "b": np.zeros(10_000, np.int64)},
+         "reserve_rows"),
+    ],
+)
+def test_sharded_rejects_bad_appends_before_any_shard_mutates(bad, match):
+    table = {"a": np.arange(21) % 3, "b": np.arange(21) % 2}
+    sq = build_sharded_flashql(table, 3, num_planes=1, reserve_rows=16)
+    state = [
+        (st.num_rows, st.epoch, dev.esp_programs, dev.store.epoch)
+        for st, dev in zip(sq.store.shards, sq.devices)
+    ]
+    rows = sq.store.num_rows
+    with pytest.raises(ValueError, match=match):
+        sq.append(bad)
+    assert sq.store.num_rows == rows
+    assert state == [
+        (st.num_rows, st.epoch, dev.esp_programs, dev.store.epoch)
+        for st, dev in zip(sq.store.shards, sq.devices)
+    ]
+
+
+def test_append_rejected_while_queries_pending():
+    table = {"a": np.arange(20) % 3}
+    sched = _scheduler(table)
+    sched.submit(Query(Eq("a", 1)))
+    with pytest.raises(RuntimeError, match="pending"):
+        sched.append({"a": np.array([1])})
+    sched.flush()
+    sched.append({"a": np.array([1])})  # drained fleet: fine
+
+    sq = build_sharded_flashql(table, 2, num_planes=1, reserve_rows=16)
+    sq.submit(Query(Eq("a", 1)))
+    with pytest.raises(RuntimeError, match="in flight"):
+        sq.append({"a": np.array([1])})
+    sq.flush()
+    sq.append({"a": np.array([1])})
+
+
+def test_append_before_ingest_is_rejected():
+    with pytest.raises(ValueError, match="ingested"):
+        BitmapStore().append({"a": np.array([1])})
+
+
+# ---------------------------------------------------------------------------
+# sharded routing of appends
+# ---------------------------------------------------------------------------
+
+
+def test_roundrobin_append_continues_stripe_sequence():
+    n0, b, s = 10, 5, 3
+    table = {"c": np.arange(n0) % 4}
+    sq = build_sharded_flashql(
+        table, s, policy="roundrobin", num_planes=1, reserve_rows=32
+    )
+    sq.append({"c": (np.arange(n0, n0 + b)) % 4})
+    for shard in range(s):
+        np.testing.assert_array_equal(
+            sq.store.row_maps[shard], np.arange(shard, n0 + b, s)
+        )
+    # MASK un-striping stays exact over the appended tail
+    (r,) = sq.serve([Query(Eq("c", 0), agg=Agg.MASK)])
+    np.testing.assert_array_equal(
+        np.asarray(r.mask.to_bits()).astype(bool),
+        (np.arange(n0 + b) % 4) == 0,
+    )
+
+
+def test_stripe_key_append_routes_to_owning_or_overflow_stripe():
+    table = {"k": np.sort(np.arange(0, 60)), "v": np.arange(60) % 3}
+    sq = build_sharded_flashql(
+        table, 3, policy="range", stripe_key="k",
+        num_planes=1, reserve_rows=32,
+    )
+    sizes = [len(m) for m in sq.store.row_maps]
+    # key 5 -> stripe 0 (owns 0..19); key 25 -> stripe 1; key 999 is past
+    # every range -> overflow into the last stripe
+    sq.append({"k": np.array([5, 25, 999]), "v": np.array([0, 0, 0])})
+    assert [len(m) for m in sq.store.row_maps] == [
+        sizes[0] + 1, sizes[1] + 1, sizes[2] + 1,
+    ]
+    assert sq.store.stripe_bounds[2][1] == 999
+
+    # pruning stays sound: the appended key is found on its owning stripe,
+    # and the other stripes are pruned without sensing
+    pruned = sq.shards_pruned
+    (r,) = sq.serve([Query(Eq("k", 999))])
+    assert r.count == 1
+    assert sq.shards_pruned == pruned + 2
+
+
+def test_append_updates_present_values_so_pruning_stays_sound():
+    table = {"k": np.sort(np.arange(0, 30)), "v": np.arange(30) % 2}
+    sq = build_sharded_flashql(
+        table, 3, policy="range", stripe_key="k",
+        num_planes=1, reserve_rows=16,
+    )
+    # key 7 exists only via the append; without shard_values maintenance
+    # the owning stripe would claim "cannot match" for the new value 77
+    sq.append({"k": np.array([77]), "v": np.array([1])})
+    (r,) = sq.serve([Query(Eq("k", 77))])
+    assert r.count == 1
+
+
+def test_plain_range_append_extends_tail_stripe():
+    table = {"c": np.arange(12) % 4}
+    sq = build_sharded_flashql(
+        table, 3, policy="range", num_planes=1, reserve_rows=16
+    )
+    sizes = [len(m) for m in sq.store.row_maps]
+    sq.append({"c": np.array([1, 2])})
+    assert [len(m) for m in sq.store.row_maps] == [
+        sizes[0], sizes[1], sizes[2] + 2,
+    ]
+    (r,) = sq.serve([Query(Eq("c", 1))])
+    assert r.count == int((np.r_[table["c"], [1, 2]] == 1).sum())
+
+
+# ---------------------------------------------------------------------------
+# aggregate correctness over appended state
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_projection_charges_program_only_stripes():
+    """A stripe that absorbed appends but never sensed (every query was
+    routed away from it) still did real programming work: the fleet
+    projection must charge its delta ESP programs, not drop the shard."""
+    table = {"k": np.arange(30), "v": np.arange(30) % 2}
+    sq = build_sharded_flashql(
+        table, 3, policy="range", stripe_key="k",
+        num_planes=1, reserve_rows=16,
+    )
+    # appends land on the overflow (last) stripe only
+    sq.append({"k": np.array([999, 1000]), "v": np.array([1, 1])})
+    # queries route to stripe 0 only; stripes 1 and 2 never sense
+    sq.serve([Query(Eq("k", 3))])
+    proj = sq.projection()
+    assert sum(p["esp_programs"] for p in proj["per_shard"]) == (
+        sq.esp_delta_programs
+    )
+    assert sq.shard_esp_programs[2] > 0  # the program-only stripe
+
+
+def test_group_by_sees_values_that_first_appear_in_an_append():
+    table = {"g": np.array([0, 0, 1, 1, 1]), "v": np.array([3, 1, 2, 2, 4])}
+    sched = _scheduler(table, reserve=32, planes=1)
+    (r,) = sched.serve([Query(Range("v", 0, 100), agg=GroupBy("g", Count()))])
+    assert r.value == {0: 2, 1: 3}
+    sched.append({"g": np.array([5, 5, 0]), "v": np.array([9, 1, 2])})
+    r_group, r_sum = sched.serve(
+        [
+            Query(Range("v", 0, 100), agg=GroupBy("g", Count())),
+            Query(Eq("g", 5), agg=Sum("v")),
+        ]
+    )
+    assert r_group.value == {0: 3, 1: 3, 5: 2}
+    assert r_sum.value == 10  # v=9 needs a grown BSI slice (4 bits)
+
+
+def test_bsi_width_growth_keeps_ranges_exact():
+    table = {"v": np.array([1, 2, 3, 4, 5])}
+    sched = _scheduler(table, reserve=32, planes=1)
+    sched.append({"v": np.array([200, 9])})
+    r_low, r_high = sched.serve(
+        [Query(Range("v", 0, 9)), Query(Range("v", 10, None))]
+    )
+    assert r_low.count == 6
+    assert r_high.count == 1
