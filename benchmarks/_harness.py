@@ -15,6 +15,7 @@ to the harness: these benchmarks measure steady-state serving.
 
 from __future__ import annotations
 
+import math
 import time
 
 REPS = 5  # best-of-N: one-shot wall timings are too noisy for a gate
@@ -40,3 +41,28 @@ def interleaved_best_of(timers: dict, reps: int = REPS) -> dict:
             t, _ = timed(fn)
             best[k] = min(best[k], t)
     return best
+
+
+def percentile(samples, q: float) -> float:
+    """The ``q``-th percentile (nearest-rank) of a non-empty sample set."""
+    s = sorted(samples)
+    if not s:
+        raise ValueError("no samples")
+    rank = min(max(1, math.ceil(q / 100 * len(s))), len(s))  # 1-based
+    return s[rank - 1]
+
+
+def latency_summary(samples) -> dict:
+    """p50/p95/mean of per-flush wall-clock samples (seconds).
+
+    Throughput gates use best-of-N interleaved timing (above); latency
+    distributions additionally need tail percentiles, because a pipelined
+    flush that overlaps shards can improve the mean while regressing the
+    tail (or vice versa) — benchmarks report both.
+    """
+    return {
+        "p50": percentile(samples, 50),
+        "p95": percentile(samples, 95),
+        "mean": sum(samples) / len(samples),
+        "n": len(samples),
+    }

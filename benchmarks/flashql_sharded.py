@@ -111,7 +111,11 @@ def serve_counts(sched: BatchScheduler, queries) -> list[int]:
 
 def main() -> None:
     smoke = "--smoke" in sys.argv[1:]
-    num_rows = 5_000 if smoke else 200_000
+    # 1M rows keeps the non-smoke gate compute-bound: the one-dispatch
+    # flush (PR 5) cut per-flush host overhead to ~1.5 ms, so at the old
+    # 200k rows serving was overhead-dominated and row striping could not
+    # show its scaling (chips must be measurably faster on 1/N the rows)
+    num_rows = 5_000 if smoke else 1_000_000
     num_queries = 16 if smoke else 64
     fleet_sizes = [2] if smoke else [2, 4]
 

@@ -80,6 +80,12 @@ class PackedStore:
     # on the regions their leaves touch, so reprogramming column A's pages
     # recompiles only plans that sense column A.
     region_epochs: dict[str, int] = field(default_factory=dict)
+    # Device-upload instrumentation: how many times the packed buffer was
+    # re-materialized as a device array.  Steady-state serving must hold
+    # this flat — in particular, spilling plans keep their scratch values
+    # device-resident (latch scratch, never store writes), so a flush full
+    # of deep-range queries re-uploads nothing (asserted in tests).
+    snapshot_uploads: int = 0
 
     # -- geometry ----------------------------------------------------------
     @property
@@ -186,6 +192,7 @@ class PackedStore:
         if self._snapshot is None:
             assert self._buf is not None, "empty store has no snapshot"
             self._snapshot = jnp.asarray(self._buf[: self._n])
+            self.snapshot_uploads += 1
         return self._snapshot
 
     def plane_view(self) -> jax.Array:

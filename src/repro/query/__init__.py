@@ -18,7 +18,9 @@ Database Analytics*):
   paper's §6.3 placement rules;
 * :mod:`repro.query.compile` — lowers predicates to ``core.expr`` trees and
   caches command plans by expression structure + leaf placement, so repeated
-  query shapes skip the Planner entirely;
+  query shapes skip the Planner entirely; ``compile_flush`` goes further
+  and compiles a whole flush (every signature group + every aggregate
+  reduce) into ONE jitted device program returning a single payload;
 * :mod:`repro.query.device` — ``FlashDevice``: the vectorized multi-plane
   engine; executes batches of structurally-identical plans with one
   ``jax.vmap``-ed gather + fused-MWS program;
@@ -58,7 +60,13 @@ from repro.query.ast import (
     TopK,
 )
 from repro.query.bitmap import AppendDelta, BitmapStore, PageDelta
-from repro.query.compile import CompiledQuery, QueryCompiler, lower
+from repro.query.compile import (
+    CompiledQuery,
+    FlushProgram,
+    QueryCompiler,
+    compile_flush,
+    lower,
+)
 from repro.query.device import FlashDevice
 from repro.query.scheduler import BatchScheduler, QueryResult
 from repro.query.shard import (
@@ -91,7 +99,9 @@ __all__ = [
     "BitmapStore",
     "PageDelta",
     "CompiledQuery",
+    "FlushProgram",
     "QueryCompiler",
+    "compile_flush",
     "lower",
     "FlashDevice",
     "BatchScheduler",

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitops import BitVector, pack_bits, unpack_bits
+from repro.core.bitops import BitVector
 from repro.kernels.popcount import popcount
 from repro.query.ast import (
     AggSpec,
@@ -185,7 +185,21 @@ class Aggregator:
     def batch_reduce(self, masks, extras, sig: tuple, *, interpret: bool):
         """Reduce ``(B, W)`` result bitmaps (+ ``(B, P, W)`` extra planes)
         to per-member device values; one jit'd dispatch per group.  ``sig``
-        is the group's :meth:`reduce_sig` (static shape info)."""
+        is the group's :meth:`reduce_sig` (static shape info).
+
+        Implementations depend only on ``(masks, extras, sig, interpret)``
+        — never on ``self.spec`` — so the fused flush program can dispatch
+        a reduce from ``(kind, sig)`` alone (:func:`kind_reduce`).
+        """
+        raise NotImplementedError
+
+    def payload_leaves(
+        self, sig: tuple, b: int, w: int
+    ) -> tuple[tuple[tuple[int, ...], object], ...]:
+        """``(shape, dtype)`` of every :meth:`batch_reduce` output leaf for
+        a ``b``-member group over ``w``-word bitmaps — the static layout of
+        this group's slice of a fused flush's single ``uint32`` payload
+        (:func:`unpack_group` re-assembles the host structure from it)."""
         raise NotImplementedError
 
     def member_partial(self, host, j: int):
@@ -227,6 +241,9 @@ class CountAggregator(Aggregator):
     def batch_reduce(self, masks, extras, sig, *, interpret):
         return popcount(masks, interpret=interpret)
 
+    def payload_leaves(self, sig, b, w):
+        return (((b,), np.int64),)
+
     def member_partial(self, host, j):
         return int(host[j])
 
@@ -247,6 +264,9 @@ class MaskAggregator(Aggregator):
     def batch_reduce(self, masks, extras, sig, *, interpret):
         return masks
 
+    def payload_leaves(self, sig, b, w):
+        return (((b, w), np.uint32),)
+
     def member_partial(self, host, j):
         return host[j]  # (W,) uint32 words
 
@@ -259,12 +279,20 @@ class MaskAggregator(Aggregator):
         return BitVector(partial, store.num_rows)
 
     def merge(self, parts, sstore):
-        # un-stripe per-shard bitmaps back into global row order
+        # un-stripe per-shard bitmaps back into global row order — pure
+        # numpy: partials arrive host-side (payload words), and the jnp
+        # unpack/pack round-trip cost ~a dispatch per shard per MASK here
         bits = np.zeros((sstore.num_rows,), dtype=np.uint8)
         for s, words in parts.items():
             n_s = sstore.shards[s].num_rows
-            bits[sstore.row_maps[s]] = np.asarray(unpack_bits(words, n_s))
-        return BitVector(pack_bits(jnp.asarray(bits)), sstore.num_rows)
+            w = np.ascontiguousarray(np.asarray(words))
+            bits[sstore.row_maps[s]] = np.unpackbits(
+                w.view(np.uint8), bitorder="little"
+            )[:n_s]
+        span = np.zeros((len(bits) + 31) // 32 * 32, dtype=np.uint8)
+        span[: len(bits)] = bits
+        packed = np.packbits(span, bitorder="little").view(np.uint32)
+        return BitVector(packed, sstore.num_rows)
 
 
 class SumAggregator(Aggregator):
@@ -281,6 +309,9 @@ class SumAggregator(Aggregator):
 
     def batch_reduce(self, masks, extras, sig, *, interpret):
         return sliced_counts(masks, extras, interpret=interpret)
+
+    def payload_leaves(self, sig, b, w):
+        return (((b, sig[0]), np.int64),)
 
     def member_partial(self, host, j):
         return host[j]  # (bits,) per-slice popcounts
@@ -300,6 +331,9 @@ class AvgAggregator(SumAggregator):
 
     def batch_reduce(self, masks, extras, sig, *, interpret):
         return sliced_counts_with_total(masks, extras, interpret=interpret)
+
+    def payload_leaves(self, sig, b, w):
+        return (((b, sig[0] + 1), np.int64),)
 
     def member_partial(self, host, j):
         return host[j]  # (bits + 1,): slice popcounts + row count
@@ -339,7 +373,12 @@ class ExtremeAggregator(Aggregator):
         return (store.columns[self._column()].bits, self.maximize)
 
     def batch_reduce(self, masks, extras, sig, *, interpret):
-        return bsi_extreme(masks, extras, maximize=self.maximize)
+        # maximize comes from sig (not self.spec) so the fused flush
+        # program can run this reduce from the group key alone
+        return bsi_extreme(masks, extras, maximize=sig[1])
+
+    def payload_leaves(self, sig, b, w):
+        return (((b, sig[0]), np.bool_), ((b,), np.bool_))
 
     def member_partial(self, host, j):
         dec, nonempty = host
@@ -407,6 +446,12 @@ class PerValueAggregator(Aggregator):
         return pervalue_counts(
             masks, extras, groups=groups, bits=bits, interpret=interpret
         )
+
+    def payload_leaves(self, sig, b, w):
+        groups, bits = sig
+        if not bits:
+            return (((b, groups), np.int64),)
+        return (((b, groups), np.int64), ((b, groups, bits), np.int64))
 
     def member_partial(self, host, j):
         if isinstance(host, tuple):
@@ -513,6 +558,54 @@ _AGGREGATORS: dict[type, type[Aggregator]] = {
     GroupBy: GroupByAggregator,
 }
 
+# spec-less instances for kind-keyed dispatch: batch_reduce and
+# payload_leaves are functions of (kind, sig) only, which is what lets a
+# fused flush program be compiled from its static flush signature
+_BY_KIND: dict[str, Aggregator] = {
+    cls.kind: cls(spec=None) for cls in _AGGREGATORS.values()
+}
+
+
+def kind_reduce(kind: str, masks, extras, sig: tuple, *, interpret: bool):
+    """Run one reduce group's device computation from its static group key
+    — the traced body :func:`repro.query.device.make_flush_runner` inlines
+    per reduce group of a fused flush program."""
+    return _BY_KIND[kind].batch_reduce(
+        masks, extras, sig, interpret=interpret
+    )
+
+
+def payload_spec(
+    kind: str, sig: tuple, b: int, w: int
+) -> tuple[tuple[tuple[int, ...], object], ...]:
+    """Static ``(shape, dtype)`` leaves of one group's payload slice."""
+    return _BY_KIND[kind].payload_leaves(sig, b, w)
+
+
+def payload_size(leaves) -> int:
+    """Flat ``uint32`` words one group contributes to the fused payload."""
+    return sum(int(np.prod(shape)) for shape, _ in leaves)
+
+
+def unpack_group(flat: np.ndarray, leaves):
+    """Re-assemble one reduce group's host structure from its payload slice.
+
+    Inverse of the fused runner's ``ravel().astype(uint32)`` flattening:
+    counts come back as exact ``int64`` (device popcounts are int32, so the
+    uint32 round-trip is lossless), MASK words stay ``uint32``, and the
+    MIN/MAX decision/non-empty flags come back as booleans.  Returns the
+    same structure ``jax.device_get(batch_reduce(...))`` would have — a
+    single array or a tuple — so :meth:`Aggregator.member_partial` applies
+    unchanged.
+    """
+    out = []
+    off = 0
+    for shape, dtype in leaves:
+        n = int(np.prod(shape))
+        out.append(flat[off : off + n].reshape(shape).astype(dtype))
+        off += n
+    return out[0] if len(out) == 1 else tuple(out)
+
 
 @functools.lru_cache(maxsize=1024)
 def get_aggregator(agg) -> Aggregator:
@@ -566,6 +659,67 @@ def _evict_one(cache: dict, cap: int) -> None:
         cache.pop(next(iter(cache)))
 
 
+def group_members(
+    specs: list, stores: list[BitmapStore]
+) -> tuple[list[Aggregator], dict[tuple, list[int]]]:
+    """Group a flush's members by reduce signature ``(kind,) + reduce_sig``.
+
+    The shared first step of both reduce drivers: the per-group transfer
+    path (:func:`reduce_flush`) and the single-payload fused flush program
+    (:func:`repro.query.compile.compile_flush`).
+    """
+    aggs = [get_aggregator(sp) for sp in specs]
+    groups: dict[tuple, list[int]] = {}
+    for i, a in enumerate(aggs):
+        groups.setdefault((a.kind,) + a.reduce_sig(stores[i]), []).append(i)
+    return aggs, groups
+
+
+def group_extras(
+    aggs: list[Aggregator],
+    members: list[int],
+    stores: list[BitmapStore],
+    store_keys: list,
+    extras_cache: dict,
+    cache_cap: int,
+):
+    """Stacked ``(B_g, P, W)`` extra sensed planes of one reduce group.
+
+    Returns ``(extras, counts)`` where ``extras`` is the device stack (or
+    None when the group's aggregate senses no extra planes) and ``counts``
+    maps member index -> planes sensed (the caller's projected-traffic
+    accounting).  The group stack is memoized per member composition:
+    recurring flush compositions — steady-state serving — skip the
+    per-member fetches AND the device concat.
+    """
+    member_pages = [
+        _cached_pages(aggs[i], stores[i], store_keys[i], extras_cache, cache_cap)
+        for i in members
+    ]
+    counts: dict[int, int] = {}
+    if not member_pages[0]:
+        return None, counts
+    cks = []
+    for i, pages in zip(members, member_pages):
+        counts[i] = len(pages)
+        cks.append((store_keys[i], pages))
+    gk = ("stack",) + tuple(cks)
+    extras = extras_cache.get(gk)
+    if extras is None:
+        stacks = []
+        for i, ck in zip(members, cks):
+            stack = extras_cache.get(ck)
+            if stack is None:
+                _evict_one(extras_cache, cache_cap)
+                stack = fetch_pages(stores[i], ck[1])
+                extras_cache[ck] = stack
+            stacks.append(stack)
+        extras = jnp.stack(stacks)  # (B_g, P, W)
+        _evict_one(extras_cache, cache_cap)
+        extras_cache[gk] = extras
+    return extras, counts
+
+
 def reduce_flush(
     masked: jax.Array,
     specs: list,
@@ -575,12 +729,17 @@ def reduce_flush(
     interpret: bool,
     extras_cache: dict,
     cache_cap: int = 128,
-) -> tuple[list, list[int]]:
-    """Batched aggregation of one flush.
+) -> tuple[list, list[int], int]:
+    """Batched aggregation of one flush (per-group transfer path).
 
-    Returns ``(partials, extra_counts)``: the per-member partials and how
-    many extra planes each member sensed (for the caller's projected-
-    traffic accounting).
+    Returns ``(partials, extra_counts, n_groups)``: the per-member
+    partials, how many extra planes each member sensed (for the caller's
+    projected-traffic accounting), and the number of reduce groups — i.e.
+    device->host transfers — the flush cost.  The fused flush program
+    (:func:`repro.query.compile.compile_flush`) replaces this driver on
+    the hot path with ONE transfer for the whole flush; this per-group
+    path remains for devices holding non-ESP pages (whose reads may
+    inject errors) and as the lockstep oracle.
 
     ``masked``: the flush's ``(B, W)`` validity-masked result bitmaps in
     member order; ``stores[i]`` / ``store_keys[i]``: the store member ``i``'s
@@ -598,13 +757,7 @@ def reduce_flush(
     pre-pipeline path paid at consumption time.
     """
     n = len(specs)
-    aggs = [get_aggregator(sp) for sp in specs]
-    groups: dict[tuple, list[int]] = {}
-    for i, a in enumerate(aggs):
-        groups.setdefault(
-            (a.kind,) + a.reduce_sig(stores[i]), []
-        ).append(i)
-
+    aggs, groups = group_members(specs, stores)
     partials: list = [None] * n
     extra_counts: list[int] = [0] * n
     for group_key, members in groups.items():
@@ -615,38 +768,14 @@ def reduce_flush(
             if len(members) == n
             else masked[jnp.asarray(np.asarray(members, np.int32))]
         )
-        extras = None
-        member_pages = [
-            _cached_pages(
-                aggs[i], stores[i], store_keys[i], extras_cache, cache_cap
-            )
-            for i in members
-        ]
-        if member_pages[0]:
-            cks = []
-            for i, pages in zip(members, member_pages):
-                extra_counts[i] = len(pages)
-                cks.append((store_keys[i], pages))
-            # the (B_g, P, W) group stack is memoized per member
-            # composition: recurring flush compositions — steady-state
-            # serving — skip the per-member fetches AND the device concat
-            gk = ("stack",) + tuple(cks)
-            extras = extras_cache.get(gk)
-            if extras is None:
-                stacks = []
-                for i, ck in zip(members, cks):
-                    stack = extras_cache.get(ck)
-                    if stack is None:
-                        _evict_one(extras_cache, cache_cap)
-                        stack = fetch_pages(stores[i], ck[1])
-                        extras_cache[ck] = stack
-                    stacks.append(stack)
-                extras = jnp.stack(stacks)  # (B_g, P, W)
-                _evict_one(extras_cache, cache_cap)
-                extras_cache[gk] = extras
+        extras, counts = group_extras(
+            aggs, members, stores, store_keys, extras_cache, cache_cap
+        )
+        for i, c in counts.items():
+            extra_counts[i] = c
         host = jax.device_get(
             a0.batch_reduce(sub, extras, sig, interpret=interpret)
         )
         for j, i in enumerate(members):
             partials[i] = aggs[i].member_partial(host, j)
-    return partials, extra_counts
+    return partials, extra_counts, len(groups)

@@ -1,4 +1,5 @@
-"""Predicate -> core-expression lowering and the cached query compiler.
+"""Predicate -> core-expression lowering, the cached query compiler, and
+the fused flush compiler.
 
 Lowering rules:
 
@@ -26,17 +27,40 @@ introduce a new value or bit slice in that column, so appending to column
 A leaves plans that only touch column B warm — and delta-page programs
 never invalidate any plan at all (plans gather by slot, and appends only
 extend page tails).
+
+On top of per-query plans, :func:`compile_flush` compiles a whole flush —
+every predicate signature group AND every aggregate reduce — into ONE
+jitted device program per *flush signature*: sensing gathers feed the
+weighted-popcount reduces device-side, and the flush's complete result set
+comes back as a single flat ``uint32`` payload, i.e. one kernel dispatch
+and one host transfer per flush however many vmap groups and aggregate
+kinds it mixes (MASK un-striping and the exact-integer 2^b weighting stay
+host-side, as before).  :class:`FlushProgram` carries the device-resident
+inputs (gather indices, order-restoring permutation, extra-plane stacks)
+so steady-state serving re-dispatches a memoized program with zero
+per-flush host preparation.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 from repro.core.commands import CommandPlan
 from repro.core.expr import Expr, Node, Page, and_, leaves, not_, or_
 from repro.core.placement import auto_layout
 from repro.core.planner import Planner
 from repro.core.store import page_region
+from repro.query.aggregate import (
+    group_extras,
+    group_members,
+    payload_size,
+    payload_spec,
+    unpack_group,
+)
 from repro.query.ast import And, Eq, In, Not, Or, Pred, Query, Range
 from repro.query.bitmap import (
     FALSE_PAGE,
@@ -45,6 +69,7 @@ from repro.query.bitmap import (
     bsi_page,
     eq_page,
 )
+from repro.query.device import group_execs, make_flush_runner
 
 
 def _le_expr(store: BitmapStore, column: str, c: int) -> Expr:
@@ -157,6 +182,10 @@ class QueryCompiler:
     # Planner.  Cleared whenever either content version moves (cheap to
     # rebuild: the next compile re-lowers and usually hits ``_plans``).
     _by_query: dict = field(default_factory=dict, repr=False)
+    # lowered ExecPlans under the same keys (see exec_for): both
+    # schedulers used to keep private exec caches with duplicate pruning
+    # logic; centralizing them here keeps one freshness rule
+    _execs: dict = field(default_factory=dict, repr=False)
 
     def epoch_sig(self, regions: tuple[str, ...]) -> tuple:
         """Current ``(region, column epoch, device region epoch)`` triple
@@ -185,6 +214,9 @@ class QueryCompiler:
             # incremental appends.
             self._plans = {
                 k: v for k, v in self._plans.items() if self.key_fresh(k)
+            }
+            self._execs = {
+                k: v for k, v in self._execs.items() if self.key_fresh(k)
             }
             self._by_query.clear()
             self._live_versions = versions
@@ -222,6 +254,155 @@ class QueryCompiler:
         self._by_query[query] = replace(cq, cache_hit=True)
         return cq
 
+    def exec_for(self, cq: CompiledQuery):
+        """The lowered :class:`repro.query.device.ExecPlan` of a compiled
+        query, memoized under its plan-cache key: a hit skips the
+        Python-side lowering entirely.  Stale keys are swept together with
+        the plan cache (their epochs can never be produced again)."""
+        e = self._execs.get(cq.key)
+        if e is None:
+            e = self.array.build_exec(cq.plan)
+            self._execs[cq.key] = e
+        return e
+
     @property
     def cache_size(self) -> int:
         return len(self._plans)
+
+
+# -- the fused flush compiler -------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FlushProgram:
+    """One flush, compiled: a single jitted device program + its inputs.
+
+    ``run(data, mask)`` dispatches the whole flush — every sensing group,
+    the order-restoring permutation, validity masking, and every aggregate
+    reduce — as ONE device program returning one flat ``uint32`` payload;
+    ``unpack`` turns the transferred payload back into per-member partials
+    (in flush member order) with :meth:`Aggregator.member_partial`.
+
+    Everything here is device-resident and immutable, so a scheduler can
+    memoize the program per batch composition + store epoch and re-run it
+    every flush with zero host-side preparation.
+    """
+
+    key: tuple  # flush signature: (sense groups, reduce groups, words)
+    runner: object  # jitted run(data, group_idxs, inv_perm, mask, sels, extras)
+    n_members: int
+    n_sense_groups: int
+    n_reduce_groups: int
+    group_idxs: tuple  # per sense group: tuple of (B_g, blocks, wls) arrays
+    inv_perm: jax.Array  # (B,) int32: concat order -> member order
+    sels: tuple  # per reduce group: (B_r,) member gather, or None if all
+    extras: tuple  # per reduce group: (B_r, P, W) plane stack, or None
+    reduce_parse: tuple  # per reduce group: (member tuple, payload leaves)
+    extra_counts: tuple  # per member: extra planes sensed (traffic accounting)
+
+    def run(self, data: jax.Array, mask: jax.Array) -> jax.Array:
+        """Dispatch the fused program (async); returns the device payload."""
+        return self.runner(
+            data, self.group_idxs, self.inv_perm, mask, self.sels, self.extras
+        )
+
+    def unpack(self, flat: np.ndarray, aggs: list) -> list:
+        """Payload words -> per-member partials (one host transfer's worth).
+
+        ``aggs`` are the flush members' aggregators in member order (the
+        program stores only static structure, so one FlushProgram serves
+        any member set with the same flush signature)."""
+        partials: list = [None] * self.n_members
+        off = 0
+        for members, leaves in self.reduce_parse:
+            n = payload_size(leaves)
+            host = unpack_group(flat[off : off + n], leaves)
+            off += n
+            for j, i in enumerate(members):
+                partials[i] = aggs[i].member_partial(host, j)
+        return partials
+
+
+def compile_flush(
+    execs: list,
+    specs: list,
+    stores: list[BitmapStore],
+    store_keys: list,
+    *,
+    words: int,
+    interpret: bool,
+    runner_cache: dict,
+    extras_cache: dict,
+    pad: bool = True,
+    cache_cap: int = 128,
+) -> FlushProgram:
+    """Compile one flush into a :class:`FlushProgram`.
+
+    ``execs`` are the members' lowered plans (spill-free or spilling — the
+    fused path executes both; callers route flushes over devices holding
+    non-ESP pages through the per-group legacy path instead, since the
+    fused program never injects read errors).  Jitted runners are shared
+    across flushes through ``runner_cache`` keyed on the flush signature,
+    so a recurring composition costs zero retraces; extra-plane stacks are
+    memoized in ``extras_cache`` exactly like the legacy reduce driver.
+    """
+    assert all(e is not None for e in execs), "fused flush needs lowered plans"
+    n = len(execs)
+    sense: list[tuple] = []
+    group_idxs: list[tuple] = []
+    order: list[int] = []
+    for signature, members, stacked in group_execs(execs, pad=pad):
+        sense.append((signature, len(members)))
+        group_idxs.append(tuple(jnp.asarray(x) for x in stacked))
+        order.extend(members)
+    inv = np.empty(n, dtype=np.int32)
+    inv[np.asarray(order)] = np.arange(n, dtype=np.int32)
+
+    aggs, rgroups = group_members(specs, stores)
+    reduce_sigs: list[tuple] = []
+    sels: list = []
+    extras: list = []
+    parse: list[tuple] = []
+    extra_counts = [0] * n
+    for gkey, members in rgroups.items():
+        kind, sig = gkey[0], gkey[1:]
+        ex, counts = group_extras(
+            aggs, members, stores, store_keys, extras_cache, cache_cap
+        )
+        for i, c in counts.items():
+            extra_counts[i] = c
+        reduce_sigs.append(
+            (kind, sig, len(members), 0 if ex is None else int(ex.shape[1]))
+        )
+        sels.append(
+            None
+            if len(members) == n
+            else jnp.asarray(np.asarray(members, np.int32))
+        )
+        extras.append(ex)
+        parse.append((tuple(members), payload_spec(kind, sig, len(members), words)))
+
+    key = (tuple(sense), tuple(reduce_sigs), words)
+    # interpret is baked into the traced program, so it joins the cache
+    # key: a (hand-built) fleet mixing interpret modes must not share
+    # runners across its devices
+    rkey = key + (bool(interpret),)
+    runner = runner_cache.get(rkey)
+    if runner is None:
+        if len(runner_cache) >= 128:  # jitted programs hold executables
+            runner_cache.clear()
+        runner = make_flush_runner(key, bool(interpret))
+        runner_cache[rkey] = runner
+    return FlushProgram(
+        key=key,
+        runner=runner,
+        n_members=n,
+        n_sense_groups=len(sense),
+        n_reduce_groups=len(reduce_sigs),
+        group_idxs=tuple(group_idxs),
+        inv_perm=jnp.asarray(inv),
+        sels=tuple(sels),
+        extras=tuple(extras),
+        reduce_parse=tuple(parse),
+        extra_counts=tuple(extra_counts),
+    )

@@ -23,9 +23,17 @@ Python loop over commands.  ``FlashDevice`` extends it for query serving:
   blocks the all-zeros slot — so shape variance (and, in a sharded fleet,
   device fan-out) does not multiply the vmap group count.
 
-Plans that spill (ESP-program scratch pages mid-plan) mutate the store and
-fall back to the eager :meth:`FlashArray.execute` path, which since the
-packed-store refactor also senses via gather + fused reduce.
+Plans that spill lower too: the spilled latch values stay device-resident
+inside the traced program (``"spill"`` steps + static cube substitutions),
+so deep-range chains batch and vmap like any other plan instead of running
+eagerly one by one.  The eager :meth:`FlashArray.execute` path remains for
+plans that sense non-ESP pages (their reads inject modelled bit errors,
+which the batch path never does).
+
+:func:`make_flush_runner` goes one step further and fuses a WHOLE flush —
+every signature group plus every aggregate reduce — into one jitted
+program returning a single host payload (see
+:func:`repro.query.compile.compile_flush`).
 """
 
 from __future__ import annotations
@@ -52,7 +60,7 @@ from repro.core.store import IDENTITY_SLOT, ZERO_SLOT, PackedStore
 class _Step:
     """Static (trace-time) part of one executable command."""
 
-    kind: str  # "mws" | "xor" | "xfer"
+    kind: str  # "mws" | "xor" | "xfer" | "spill"
     inverse: bool = False
     init_s: bool = True
     init_c: bool = True
@@ -60,14 +68,33 @@ class _Step:
     source: str = "C"
     invert: bool = False
     shape: tuple[int, int] = (0, 0)  # (blocks, padded wordlines) for "mws"
+    # "mws": (block_pos, wordline_pos, spill ordinal) substitutions — the
+    # gathered cube rows replaced by device-resident spilled values; the
+    # positions are static, so spilling plans stay pure array programs
+    subs: tuple[tuple[int, int, int], ...] = ()
+    ordinal: int = 0  # "spill": index into the plan's scratch values
 
 
 @dataclass(frozen=True)
 class ExecPlan:
-    """A CommandPlan lowered to gather indices + static step descriptors."""
+    """A CommandPlan lowered to gather indices + static step descriptors.
+
+    Spilling plans lower too: each :class:`SpillCommand` becomes a
+    ``"spill"`` step that parks the latch value in device-resident scratch
+    (a plan-local value list inside the traced program — never a store
+    write), and later MWS steps that sense the scratch page substitute it
+    into the gathered cube at static positions.  Deep-range queries
+    therefore batch, vmap, and join the fused flush reduce like any
+    spill-free plan.
+    """
 
     steps: tuple[_Step, ...]
     idxs: tuple[np.ndarray, ...]  # one (blocks, wordlines) array per MWS
+    spills: int = 0  # scratch values the plan carries device-side
+    # scratch blocks the plan's SpillCommands target: a spill is
+    # physically an ESP program, so batched executions charge the same
+    # P/E wear the eager path does (see age_spill_blocks)
+    spill_blocks: tuple[int, ...] = ()
 
     @property
     def signature(self) -> tuple[_Step, ...]:
@@ -82,11 +109,27 @@ class ExecPlan:
         ISCM flags and differ only in how many (blocks, wordlines) each MWS
         gathers; the narrower plan pads to the wider shape with identity
         slots (see :func:`pad_idx`) and then shares its vmap group.
+        Scratch substitution positions are NOT erased — they are part of
+        the command sequence, and padding never moves them.
         """
         return tuple(
             replace(st, shape=(0, 0)) if st.kind == "mws" else st
             for st in self.steps
         )
+
+
+def age_spill_blocks(pec: dict, execs) -> None:
+    """Charge P/E wear for the scratch programs of batch-executed plans.
+
+    A SpillCommand is physically an ESP program to a scratch wordline; the
+    batched paths run it as device-resident latch scratch, but the wear on
+    the scratch block is real — this keeps ``pec`` consistent with the
+    eager :meth:`FlashArray.execute`, which bumps per SpillCommand.
+    """
+    for e in execs:
+        if e is not None:
+            for b in e.spill_blocks:
+                pec[b] = pec.get(b, 0) + 1
 
 
 def pad_idx(idx: np.ndarray, shape: tuple[int, int]) -> np.ndarray:
@@ -157,6 +200,48 @@ def reorder_rows(pieces: list[jax.Array], order: list[int]) -> jax.Array:
     return allout[jnp.asarray(inv)]
 
 
+def plan_step_fn(signature: tuple[_Step, ...], interpret: bool):
+    """Pure single-plan executor for one signature: ``run_one(data, *idxs)``.
+
+    The traced body shared by :func:`make_plan_runner` (standalone jitted
+    vmap) and :func:`make_flush_runner` (inlined into the fused flush
+    program).  ``"spill"`` steps park the latch value in a plan-local
+    scratch list; MWS steps with substitutions splice those values into the
+    gathered cube at static positions (device-resident scratch — spilling
+    plans never touch the store).
+    """
+
+    def run_one(data: jax.Array, *idxs: jax.Array) -> jax.Array:
+        s = c = out = None
+        scratch: list[jax.Array] = []
+        it = iter(idxs)
+        for st in signature:
+            if st.kind == "mws":
+                cube = data[next(it)]  # (blocks, wordlines, words)
+                for bi, wi, o in st.subs:
+                    cube = cube.at[bi, wi].set(scratch[o])
+                raw = fused_block_reduce(
+                    cube, st.inverse, interpret=interpret
+                )
+                s = raw if (st.init_s or s is None) else s & raw
+                if st.init_c:
+                    c = None
+                if st.move:
+                    c = s if c is None else c | s
+            elif st.kind == "spill":
+                assert st.ordinal == len(scratch)
+                scratch.append(s if st.source == "S" else c)
+            elif st.kind == "xor":
+                c = s ^ c
+            else:
+                val = s if st.source == "S" else c
+                out = ~val if st.invert else val
+        assert out is not None, "plan missing TransferCommand"
+        return out
+
+    return run_one
+
+
 def make_plan_runner(
     signature: tuple[_Step, ...],
     interpret: bool,
@@ -173,29 +258,7 @@ def make_plan_runner(
     each batch element to its shard — one jit-of-vmap dispatch covers a
     whole signature group across every device of a sharded deployment.
     """
-
-    def run_one(data: jax.Array, *idxs: jax.Array) -> jax.Array:
-        s = c = out = None
-        it = iter(idxs)
-        for st in signature:
-            if st.kind == "mws":
-                cube = data[next(it)]  # (blocks, wordlines, words)
-                raw = fused_block_reduce(
-                    cube, st.inverse, interpret=interpret
-                )
-                s = raw if (st.init_s or s is None) else s & raw
-                if st.init_c:
-                    c = None
-                if st.move:
-                    c = s if c is None else c | s
-            elif st.kind == "xor":
-                c = s ^ c
-            else:
-                val = s if st.source == "S" else c
-                out = ~val if st.invert else val
-        assert out is not None, "plan missing TransferCommand"
-        return out
-
+    run_one = plan_step_fn(signature, interpret)
     n_mws = sum(1 for st in signature if st.kind == "mws")
     if shard_data:
         return jax.jit(
@@ -207,6 +270,50 @@ def make_plan_runner(
     return jax.jit(jax.vmap(run_one, in_axes=(None,) + (0,) * n_mws))
 
 
+def make_flush_runner(key: tuple, interpret: bool):
+    """Build the single jitted program executing a whole flush signature.
+
+    ``key`` is the flush signature: ``(sense, reduce, w)`` where ``sense``
+    is a tuple of ``(plan signature, member count)`` per vmap group,
+    ``reduce`` a tuple of ``(aggregator kind, reduce_sig, member count,
+    extra-plane count)`` per reduce group, and ``w`` the store's logical
+    word count.  The returned ``run(data, group_idxs, inv_perm, mask,
+    sels, extras)`` fuses EVERYTHING a flush does device-side — per-group
+    gather + latch algebra, the order-restoring inverse permutation,
+    validity masking, and every aggregate's (weighted-)popcount reduce —
+    and returns ONE flat ``uint32`` payload (see
+    :func:`repro.query.aggregate.unpack_group`): one kernel dispatch and
+    one host transfer per flush, however many signature groups and
+    aggregate kinds it mixes.
+    """
+    from repro.query.aggregate import kind_reduce
+
+    sense, reduce_sigs, w = key
+
+    def run(data, group_idxs, inv_perm, mask, sels, extras):
+        pieces = []
+        for (psig, _n), idxs in zip(sense, group_idxs):
+            one = plan_step_fn(psig, interpret)
+            n_mws = len(idxs)
+            out = jax.vmap(one, in_axes=(None,) + (0,) * n_mws)(
+                data, *idxs
+            )
+            pieces.append(out[:, :w])
+        allout = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+        masked = allout[inv_perm] & mask  # member order, padding zeroed
+        parts = []
+        for (kind, sig, _n, _p), sel, ex in zip(reduce_sigs, sels, extras):
+            sub = masked if sel is None else masked[sel]
+            out = kind_reduce(kind, sub, ex, sig, interpret=interpret)
+            parts.extend(
+                jnp.ravel(leaf).astype(jnp.uint32)
+                for leaf in jax.tree_util.tree_leaves(out)
+            )
+        return jnp.concatenate(parts)
+
+    return jax.jit(run)
+
+
 @dataclass
 class FlashDevice(FlashArray):
     """Multi-plane Flash-Cosmos device with batched plan execution."""
@@ -216,6 +323,7 @@ class FlashDevice(FlashArray):
     # signature so one vmap group covers every shape variant of a family
     pad_signatures: bool = True
     last_signature_groups: int = 0  # groups dispatched by the last batch
+    last_eager_plans: int = 0  # noisy-page eager fallbacks in the last batch
     _runners: dict = field(default_factory=dict, repr=False)
     # prepared-batch cache: grouping + device-resident idx uploads per
     # recurring batch composition (see execute_batch_stacked's batch_key)
@@ -232,20 +340,31 @@ class FlashDevice(FlashArray):
 
     # -- plan lowering -----------------------------------------------------
     def build_exec(self, plan: CommandPlan) -> ExecPlan | None:
-        """Lower to an ExecPlan, or None if the plan spills (not batchable)."""
-        if plan.num_spills:
-            return None
+        """Lower a plan (spilling or not) to a batchable ExecPlan.
+
+        Spill commands lower to ``"spill"`` steps whose values stay
+        device-resident; MWS commands that re-sense a spilled scratch page
+        record a static substitution instead of a store slot, so the whole
+        plan — deep-range chains included — is a pure function of the
+        packed snapshot and joins the fused/vmap execution paths.
+        """
         steps: list[_Step] = []
         idxs: list[np.ndarray] = []
+        scratch_ord: dict[str, int] = {}
+        spill_blocks: list[int] = []
         for cmd in plan.commands:
             if isinstance(cmd, MWSCommand):
                 n_max = max(len(t.wordlines) for t in cmd.targets)
                 idx = np.full(
                     (len(cmd.targets), n_max), IDENTITY_SLOT, dtype=np.int32
                 )
+                subs: list[tuple[int, int, int]] = []
                 for bi, t in enumerate(cmd.targets):
                     for wi, wl in enumerate(t.wordlines):
                         name = self.layout.page_at(t.block, wl)
+                        if name in scratch_ord:
+                            subs.append((bi, wi, scratch_ord[name]))
+                            continue  # placeholder gathers the identity row
                         idx[bi, wi] = self.store.slot(name)
                 steps.append(
                     _Step(
@@ -255,18 +374,34 @@ class FlashDevice(FlashArray):
                         init_c=cmd.iscm.init_c_latch,
                         move=cmd.iscm.move_s_to_c,
                         shape=(len(cmd.targets), n_max),
+                        subs=tuple(subs),
                     )
                 )
                 idxs.append(idx)
+            elif isinstance(cmd, SpillCommand):
+                steps.append(
+                    _Step(
+                        "spill",
+                        source=cmd.source,
+                        ordinal=len(scratch_ord),
+                    )
+                )
+                scratch_ord[cmd.page_name] = len(scratch_ord)
+                spill_blocks.append(cmd.block)
             elif isinstance(cmd, XORCommand):
                 steps.append(_Step("xor"))
             elif isinstance(cmd, TransferCommand):
                 steps.append(
                     _Step("xfer", source=cmd.source, invert=cmd.invert)
                 )
-            elif isinstance(cmd, (SpillCommand, ESPCommand)):
-                raise AssertionError("spill-free plan expected")
-        return ExecPlan(tuple(steps), tuple(idxs))
+            elif isinstance(cmd, ESPCommand):
+                raise AssertionError("data writes flow through fc_write")
+        return ExecPlan(
+            tuple(steps),
+            tuple(idxs),
+            spills=len(scratch_ord),
+            spill_blocks=tuple(spill_blocks),
+        )
 
     # -- batched execution -------------------------------------------------
     def _runner(self, signature: tuple[_Step, ...]):
@@ -278,8 +413,14 @@ class FlashDevice(FlashArray):
 
     def _prepare_batch(
         self, execs: list[ExecPlan | None], batch_key=None
-    ) -> list[tuple]:
+    ) -> tuple[list[tuple], tuple[int, ...]]:
         """Group + pad execs and upload their gather indices to the device.
+
+        Returns ``(groups, eager_ix)``: the vmap groups plus the indices of
+        plans demoted to the eager path — spilling plans that sense a
+        non-ESP page keep their pre-pipeline error-injecting execution
+        (the batch path never injects read errors); a spill-free plan over
+        a non-ESP page still raises, as it always did.
 
         With ``batch_key`` (any hashable derived from the plan-cache keys,
         whose epoch components make staleness impossible), the prepared
@@ -294,22 +435,31 @@ class FlashDevice(FlashArray):
         noisy_slots = {
             self.store.slot(n) for n in self._non_esp if n in self.store
         }
+        eager_ix: list[int] = []
+        use = list(execs)
         if noisy_slots:
-            for e in execs:
+            for i, e in enumerate(execs):
                 if e is not None and any(
                     bool(np.isin(idx, list(noisy_slots)).any())
                     for idx in e.idxs
                 ):
-                    raise ValueError(
-                        "batched execution senses a non-ESP page; "
-                        "reprogram it with esp=True or execute eagerly"
-                    )
-        prepared = [
-            (signature, members, tuple(jnp.asarray(s) for s in stacked))
-            for signature, members, stacked in group_execs(
-                execs, pad=self.pad_signatures
-            )
-        ]
+                    if e.spills:
+                        use[i] = None  # eager fallback injects the errors
+                        eager_ix.append(i)
+                    else:
+                        raise ValueError(
+                            "batched execution senses a non-ESP page; "
+                            "reprogram it with esp=True or execute eagerly"
+                        )
+        prepared = (
+            [
+                (signature, members, tuple(jnp.asarray(s) for s in stacked))
+                for signature, members, stacked in group_execs(
+                    use, pad=self.pad_signatures
+                )
+            ],
+            tuple(eager_ix),
+        )
         if batch_key is not None:
             if len(self._batch_cache) >= 64:  # bound recurring compositions
                 self._batch_cache.clear()
@@ -331,15 +481,19 @@ class FlashDevice(FlashArray):
         sliced per plan — which is what keeps serving overhead flat as
         batches grow.  The batch path never injects read errors, so every
         page a batched plan senses must be ESP-programmed (`fc_write`
-        default) — unrelated non-ESP pages are fine; spilling plans run
-        eagerly one by one.  Pass ``execs`` (from :meth:`build_exec`) to
-        skip re-lowering, and ``batch_key`` to memoize the batch grouping
-        (see :meth:`_prepare_batch`).
+        default) — unrelated non-ESP pages are fine, and spilling plans
+        over noisy pages demote to the eager error-injecting path.  Pass
+        ``execs`` (from :meth:`build_exec`) to skip re-lowering, and
+        ``batch_key`` to memoize the batch grouping (see
+        :meth:`_prepare_batch`).
         """
         if execs is None:
             execs = [self.build_exec(p) for p in plans]
-        groups = self._prepare_batch(execs, batch_key)
+        groups, eager_ix = self._prepare_batch(execs, batch_key)
         self.last_signature_groups = len(groups)
+        self.last_eager_plans = len(eager_ix) + sum(
+            1 for e in execs if e is None
+        )
 
         w = self.store.num_words
         pieces: list[jax.Array] = []  # (B_g, w) per group / eager plan
@@ -351,9 +505,12 @@ class FlashDevice(FlashArray):
                 pieces.append(out[:, :w])
                 order.extend(members)
         for i, e in enumerate(execs):
-            if e is None:  # spilling plan: eager fallback
+            if e is None or i in eager_ix:  # noisy-page eager fallback
+                # execute() charges its own spill wear
                 pieces.append(self.execute(plans[i], seed=seed + i)[None])
                 order.append(i)
+            elif e.spill_blocks:
+                age_spill_blocks(self.pec, (e,))
         if not pieces:
             return jnp.zeros((0, w or 0), jnp.uint32)
         return reorder_rows(pieces, order)

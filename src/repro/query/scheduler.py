@@ -1,14 +1,18 @@
 """BatchScheduler: admission, shape-grouped batching, and stats/projection.
 
 The serving loop of FlashQL: clients ``submit`` queries (tickets), and
-``flush`` compiles the pending set through the plan cache, hands the plans
-to :class:`FlashDevice.execute_batch` (structurally-identical plans execute
-as one ``jax.vmap`` batch), applies the aggregation through the pluggable
-:class:`repro.query.aggregate.Aggregator` pipeline — every aggregate kind
-in the flush reduces with ONE jit'd (weighted-)popcount dispatch per
-reduce signature, e.g. ``COUNT`` is one batched popcount over all result
-bitmaps and ``SUM`` one weighted popcount over the stacked BSI slices —
-and returns per-ticket results with latency.
+``flush`` compiles the pending set through the plan cache and executes it
+as ONE fused device program per flush signature
+(:func:`repro.query.compile.compile_flush`): every predicate signature
+group senses under ``jax.vmap``, the results feed every aggregate's
+(weighted-)popcount reduce device-side, and the whole flush returns as a
+single flat payload — one kernel dispatch and one host transfer per
+flush, whatever mix of aggregate kinds it holds (counted in
+``host_transfers`` / ``fused_dispatches`` and asserted in tests).
+Devices holding non-ESP pages (whose reads inject modelled bit errors)
+fall back to the per-group legacy path: vmap batches via
+:class:`FlashDevice.execute_batch`, then one reduce dispatch + one
+transfer per reduce signature (:func:`repro.query.aggregate.reduce_flush`).
 
 The scheduler also records every executed MWS command's shape
 (:class:`repro.flashsim.workloads.MWSCommandShape`), so ``projection()``
@@ -25,6 +29,7 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.commands import MWSCommand
 from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
@@ -37,26 +42,72 @@ from repro.query.aggregate import (
 )
 from repro.query.ast import Count, Mask, Query, normalize_agg
 from repro.query.bitmap import BitmapStore
-from repro.query.compile import QueryCompiler
-from repro.query.device import FlashDevice
+from repro.query.compile import QueryCompiler, compile_flush
+from repro.query.device import FlashDevice, age_spill_blocks
 
 # one extra sensed plane (a BSI slice / equality bitmap read for an
 # aggregate) = one single-wordline sensing in the SSD projection
 AGG_READ_SHAPE = MWSCommandShape(n_blocks=1, max_wls_per_block=1)
 
 
-def prune_stale_execs(cache: dict, fresh) -> None:
-    """Drop ExecPlan-cache entries whose plan keys went stale.
+def merge_appends(batches: list[dict]) -> dict:
+    """Concatenate queued append batches into one combined batch."""
+    return {
+        col: np.concatenate([b[col] for b in batches])
+        for col in batches[0]
+    }
 
-    Exec caches key on the compiler's plan-cache key, whose third
-    component carries the leaf-region epochs (column metadata + device
-    region) — once any of a key's regions moves, that key can never be
-    produced by ``compile`` again.  ``fresh`` is the owning compiler's
-    :meth:`QueryCompiler.key_fresh`.
+
+def queue_append(store, buf: list[dict], rows: dict) -> None:
+    """Validate + queue one append batch for coalesced programming.
+
+    Shared by both schedulers' ``coalesce_appends`` paths so the subtle
+    ordering stays in one place: THIS batch's column set is validated
+    first (the merge below is built from the first queued batch's
+    columns, so an unknown or missing column would slip through it), then
+    the cumulative concatenation must fit the schema and capacity BEFORE
+    the batch is accepted — ``apply_appends`` can never fail halfway.
+    Empty batches validate but queue nothing (an empty ndarray defaults
+    to float64 and would poison the merged integer dtype).
+
+    The cumulative check re-merges the queue, O(queued rows) per append:
+    exactness is the point — stripe-key routing is data-dependent, so a
+    cheaper running row count could admit a stream that overflows one
+    stripe at apply time.  Flush boundaries bound the queue length.
     """
-    stale = [k for k in cache if not fresh(k)]
-    for k in stale:
-        del cache[k]
+    arrays = {c: np.asarray(v) for c, v in rows.items()}
+    store.check_append(arrays)
+    store.check_append(merge_appends(buf + [arrays]))
+    if len(next(iter(arrays.values()))):
+        buf.append(arrays)
+
+
+def plan_traffic(plan) -> tuple[tuple, int]:
+    """A plan's projected-traffic contribution, memoized on the plan.
+
+    Walking every MWS command's wordline bitmaps per flush dominated warm
+    serving (it was ~2/3 of a steady-state sharded flush in profiles);
+    plans are cached and immutable, so their ``(shape counts, wordlines)``
+    is computed once and pinned on the instance.
+    """
+    memo = getattr(plan, "_traffic_memo", None)
+    if memo is None:
+        shapes: Counter = Counter()
+        wls = 0
+        for cmd in plan.commands:
+            if isinstance(cmd, MWSCommand):
+                shapes[
+                    MWSCommandShape(
+                        n_blocks=cmd.num_blocks,
+                        max_wls_per_block=max(
+                            len(t.wordlines) for t in cmd.targets
+                        ),
+                    )
+                ] += 1
+                wls += cmd.num_wordlines
+        memo = (tuple(shapes.items()), wls)
+        plan._traffic_memo = memo
+    return memo
 
 
 def record_plan_traffic(counter: Counter, plan) -> int:
@@ -66,18 +117,9 @@ def record_plan_traffic(counter: Counter, plan) -> int:
     tracked exactly because ragged commands pad to ``max_wls_per_block`` and
     must not inflate operand counts in the projection.
     """
-    wls = 0
-    for cmd in plan.commands:
-        if isinstance(cmd, MWSCommand):
-            counter[
-                MWSCommandShape(
-                    n_blocks=cmd.num_blocks,
-                    max_wls_per_block=max(
-                        len(t.wordlines) for t in cmd.targets
-                    ),
-                )
-            ] += 1
-            wls += cmd.num_wordlines
+    shapes, wls = plan_traffic(plan)
+    for shape, cnt in shapes:
+        counter[shape] += cnt
     return wls
 
 
@@ -166,6 +208,13 @@ class BatchScheduler:
     store: BitmapStore
     max_batch: int = 256
     compiler: QueryCompiler = None  # type: ignore[assignment]
+    # one fused device program + ONE host transfer per flush (the default
+    # serving path); False keeps the per-reduce-group legacy path — the
+    # oracle the differential harness compares against
+    fuse_flush: bool = True
+    # queue small append() batches and program them as one coalesced delta
+    # per touched page on the next flush (or apply_appends())
+    coalesce_appends: bool = False
 
     _pending: list[tuple[int, Query, float]] = field(default_factory=list)
     _next_ticket: int = 0
@@ -176,24 +225,33 @@ class BatchScheduler:
     eager_plans: int = 0
     serve_time_s: float = 0.0
     total_latency_s: float = 0.0
+    # per-flush dispatch/transfer accounting: the fused path costs one
+    # jitted program execution and one device->host payload copy per flush;
+    # the legacy path one transfer per reduce signature
+    fused_dispatches: int = 0
+    host_transfers: int = 0
     # incremental ingest: appended rows and the delta pages they programmed
     # (the projection charges exactly these, never a full index reprogram)
     rows_appended: int = 0
     esp_delta_programs: int = 0
+    append_batches_coalesced: int = 0
     # executed traffic, aggregated per command shape (bounded memory even
     # for a long-running service); wordlines tracked exactly because ragged
     # commands pad to max_wls_per_block and must not inflate operand counts
     command_shape_counts: Counter = field(default_factory=Counter)
     wordlines_sensed: int = 0
     _host_postprocess: bool = False
-    # ExecPlans memoized under the compiler's plan-cache key: a cache hit
-    # skips the Python-side lowering entirely, not just the Planner
-    _exec_cache: dict = field(default_factory=dict, repr=False)
     # stacked extra sensed planes (BSI slices / equality bitmaps) per
     # (store epoch, page tuple) — see repro.query.aggregate.reduce_flush
     _extras_cache: dict = field(default_factory=dict, repr=False)
     # device-resident valid-row word mask, memoized per ingest epoch
     _mask_cache: tuple | None = field(default=None, repr=False)
+    # fused flush programs per (batch composition, store epochs) and their
+    # jitted runners per flush signature — see compile_flush
+    _flush_programs: dict = field(default_factory=dict, repr=False)
+    _runner_cache: dict = field(default_factory=dict, repr=False)
+    # queued (validated) append batches awaiting coalesced programming
+    _append_buf: list = field(default_factory=list, repr=False)
 
     def __post_init__(self):
         if self.compiler is None:
@@ -211,13 +269,46 @@ class BatchScheduler:
         tail words of pages the new rows actually set, plus fresh pages
         for first-seen values / grown BSI widths.  Plans over columns
         whose index metadata did not change stay warm in the plan cache.
+
+        With ``coalesce_appends`` the (still fully validated, cumulative
+        capacity included) batch is queued instead and returns 0; the next
+        ``flush()`` — or an explicit :meth:`apply_appends` — programs all
+        queued batches as ONE delta per touched page, so N small appends
+        between flushes cost the page programs of one combined append.
         """
         if self._pending:
             raise RuntimeError(
                 f"append() with {len(self._pending)} queries pending; "
                 "flush() first so no ticket spans the mutation"
             )
+        if self.coalesce_appends:
+            queue_append(self.store, self._append_buf, rows)
+            return 0
         delta = self.store.append(rows)  # validates before mutating
+        self.store.program_delta(self.device, delta)
+        self.rows_appended += delta.rows
+        self.esp_delta_programs += delta.num_programs
+        return delta.num_programs
+
+    @property
+    def appends_queued(self) -> int:
+        return len(self._append_buf)
+
+    def apply_appends(self) -> int:
+        """Program every queued append batch as one coalesced delta.
+
+        A page touched by many queued batches programs ONCE (its combined
+        tail words); returns the pages programmed.  Ran automatically at
+        the top of ``flush()``, so queries submitted after an append always
+        see its rows — identical semantics to immediate appends, minus the
+        per-batch page programs.
+        """
+        if not self._append_buf:
+            return 0
+        rows = merge_appends(self._append_buf)
+        self.append_batches_coalesced += len(self._append_buf)
+        self._append_buf.clear()
+        delta = self.store.append(rows)
         self.store.program_delta(self.device, delta)
         self.rows_appended += delta.rows
         self.esp_delta_programs += delta.num_programs
@@ -245,6 +336,7 @@ class BatchScheduler:
     # -- serving -------------------------------------------------------------
     def flush(self) -> dict[int, QueryResult]:
         """Compile, batch-execute, and aggregate all pending queries."""
+        self.apply_appends()
         if not self._pending:
             return {}
         batch, self._pending = (
@@ -253,47 +345,84 @@ class BatchScheduler:
         )
         t0 = time.perf_counter()
         compiled = [self.compiler.compile(q) for _, q, _ in batch]
-        plans = [c.plan for c in compiled]
-        execs = []
-        for cq in compiled:
-            if cq.key not in self._exec_cache:
-                prune_stale_execs(self._exec_cache, self.compiler.key_fresh)
-                self._exec_cache[cq.key] = self.device.build_exec(cq.plan)
-            execs.append(self._exec_cache[cq.key])
+        execs = [self.compiler.exec_for(cq) for cq in compiled]
         if self._mask_cache is None or self._mask_cache[0] != self.store.epoch:
             self._mask_cache = (
                 self.store.epoch,
                 jnp.asarray(self.store.valid_words_mask()),
             )
         mask_words = self._mask_cache[1]
-        stacked = (
-            self.device.execute_batch_stacked(
-                plans,
-                execs=execs,
-                # epochs inside cq.key make the memoized grouping
-                # impossible to hit stale
-                batch_key=tuple(cq.key for cq in compiled),
-            )
-            & mask_words
-        )  # (B, W), padding zeroed
-
-        # aggregate: one jit'd (weighted-)popcount reduce + one host
-        # transfer per reduce signature, whatever mix of kinds the flush
-        # holds (repro.query.aggregate)
         queries = [q for _, q, _ in batch]
         aggs = [get_aggregator(q.agg) for q in queries]
-        partials, extra_counts = reduce_flush(
-            stacked,
-            [q.agg for q in queries],
-            [self.store] * len(queries),
-            [self.store.epoch] * len(queries),
-            interpret=self.device.interpret,
-            extras_cache=self._extras_cache,
-        )
 
-        # force device work before timestamping, or qps/latency would only
-        # measure the Python-side dispatch
-        jax.block_until_ready(stacked)
+        if self.fuse_flush and not self.device._non_esp:
+            # the fused path: ONE jitted program senses every signature
+            # group and reduces every aggregate kind device-side; ONE
+            # payload transfer brings back the whole flush.  Epochs inside
+            # the plan keys + the content epochs make stale hits impossible.
+            # Plan keys cover only the predicate side, so the members'
+            # aggregate specs join the key explicitly — the same predicates
+            # under different aggregates are different programs.
+            key = (
+                tuple(cq.key for cq in compiled),
+                tuple(a.spec for a in aggs),
+                self.store.epoch,
+                self.device.store.epoch,
+            )
+            program = self._flush_programs.get(key)
+            if program is None:
+                if len(self._flush_programs) >= 64:
+                    self._flush_programs.clear()
+                program = compile_flush(
+                    execs,
+                    [q.agg for q in queries],
+                    [self.store] * len(queries),
+                    [self.store.epoch] * len(queries),
+                    words=self.store.words,
+                    interpret=self.device.interpret,
+                    runner_cache=self._runner_cache,
+                    extras_cache=self._extras_cache,
+                    pad=self.device.pad_signatures,
+                )
+                self._flush_programs[key] = program
+            payload = program.run(self.device.store.snapshot(), mask_words)
+            age_spill_blocks(self.device.pec, execs)
+            self.fused_dispatches += 1
+            self.device.last_signature_groups = program.n_sense_groups
+            # the single device->host copy of the flush (also the barrier
+            # that keeps qps/latency from measuring only Python dispatch)
+            host = jax.device_get(payload)
+            self.host_transfers += 1
+            partials = program.unpack(host, aggs)
+            extra_counts = list(program.extra_counts)
+        else:
+            # legacy path (devices with non-ESP pages, and the oracle for
+            # the differential harness): vmap batches + one reduce dispatch
+            # and one transfer per reduce signature
+            plans = [c.plan for c in compiled]
+            stacked = (
+                self.device.execute_batch_stacked(
+                    plans,
+                    execs=execs,
+                    # epochs inside cq.key make the memoized grouping
+                    # impossible to hit stale
+                    batch_key=tuple(cq.key for cq in compiled),
+                )
+                & mask_words
+            )  # (B, W), padding zeroed
+            partials, extra_counts, n_groups = reduce_flush(
+                stacked,
+                [q.agg for q in queries],
+                [self.store] * len(queries),
+                [self.store.epoch] * len(queries),
+                interpret=self.device.interpret,
+                extras_cache=self._extras_cache,
+            )
+            self.host_transfers += n_groups
+            self.eager_plans += self.device.last_eager_plans
+            # force device work before timestamping, or qps/latency would
+            # only measure the Python-side dispatch
+            jax.block_until_ready(stacked)
         t1 = time.perf_counter()
         results: dict[int, QueryResult] = {}
         for i, ((ticket, q, t_submit), cq) in enumerate(zip(batch, compiled)):
@@ -320,7 +449,6 @@ class BatchScheduler:
         self.queries_served += len(batch)
         self.flushes += 1
         self.vmap_batches += self.device.last_signature_groups
-        self.eager_plans += sum(1 for e in execs if e is None)
         self.serve_time_s += t1 - t0
         return results
 
@@ -350,8 +478,11 @@ class BatchScheduler:
             ),
             "mean_latency_s": self.total_latency_s / served,
             "mws_commands": sum(self.command_shape_counts.values()),
+            "fused_dispatches": self.fused_dispatches,
+            "host_transfers": self.host_transfers,
             "rows_appended": self.rows_appended,
             "esp_delta_programs": self.esp_delta_programs,
+            "append_batches_coalesced": self.append_batches_coalesced,
         }
 
     def projection(self, ssd: SSDConfig = DEFAULT_SSD) -> dict:

@@ -45,6 +45,15 @@ independent :class:`repro.query.device.FlashDevice`s — round-robin
   value-aligned, and ``shard_values``/``stripe_bounds`` track the new
   rows so range pruning stays sound.
 
+* **pipelining** — with ``pipeline=True`` the fleet flushes
+  *asynchronously*: each shard's batch compiles into one fused device
+  program (sensing + every aggregate reduce, one payload — see
+  :func:`repro.query.compile.compile_flush`) and shard *k+1* is
+  dispatched while shard *k*'s program is still in flight, with payloads
+  double-buffered and ``device_get`` only at gather.  Routing-aware
+  queue depths let range-pruned shards donate their slots to hot
+  stripes.  The lockstep path (default) remains the differential oracle.
+
 ``projection()`` replays each device's executed traffic through the
 flashsim timing/energy model and aggregates over the fleet — wall-clock
 as the max over concurrently-serving chips, energy as the sum — charging
@@ -55,7 +64,7 @@ from __future__ import annotations
 
 import bisect
 import time
-from collections import Counter
+from collections import Counter, deque
 from dataclasses import dataclass, field
 from typing import Iterable
 
@@ -73,9 +82,10 @@ from repro.query.aggregate import (
 )
 from repro.query.ast import And, Eq, In, Or, Pred, Query, Range
 from repro.query.bitmap import BitmapStore, validate_batch
-from repro.query.compile import QueryCompiler
+from repro.query.compile import QueryCompiler, compile_flush
 from repro.query.device import (
     FlashDevice,
+    age_spill_blocks,
     group_execs,
     make_plan_runner,
     reorder_rows,
@@ -83,8 +93,9 @@ from repro.query.device import (
 from repro.query.scheduler import (
     AGG_READ_SHAPE,
     QueryResult,
+    merge_appends,
     project_traffic,
-    prune_stale_execs,
+    queue_append,
     record_plan_traffic,
 )
 
@@ -269,24 +280,14 @@ class ShardedBitmapStore:
             )
 
     # -- incremental ingest --------------------------------------------------
-    def append(self, rows: dict[str, np.ndarray]) -> dict[int, object]:
-        """Route an append batch to its stripes; returns per-shard deltas.
+    def _route_append(self, rows: dict[str, np.ndarray]):
+        """Route + validate an append batch WITHOUT mutating anything.
 
-        Routing by policy: ``roundrobin`` continues the stripe sequence
-        (global row ``j`` -> shard ``j % num_shards``); a ``stripe_key``
-        fleet routes each row to the stripe *owning* its key (the first
-        stripe whose recorded key range reaches the key) with keys beyond
-        every range overflowing into the last stripe; plain ``range``
-        appends extend the tail stripe (new rows hold the highest global
-        positions).  The whole batch — column set, lengths, values, and
-        every destination shard's word capacity — is validated before any
-        shard mutates.
-
-        New values are propagated to EVERY active shard as a forced
-        schema update (all-zero equality pages where absent), keeping
-        value order aligned fleet-wide so aggregate shard-merges stay
-        correct; ``shard_values`` records only the values actually
-        present per stripe, so range routing keeps pruning soundly.
+        Returns ``(b, n0, active, subs, new_schema, changed)`` where
+        ``subs`` maps each active shard to its (sub-batch, picked row
+        positions).  Shared by :meth:`append` (which then mutates) and
+        :meth:`check_append` (coalescing schedulers validate each queued
+        batch cumulatively before accepting it).
         """
         if not self.num_rows:
             raise ValueError("append() needs an ingested store")
@@ -334,6 +335,33 @@ class ShardedBitmapStore:
             sub, picked = subs[s]
             if len(picked) or changed:
                 self.shards[s].check_append(sub)
+        return b, n0, active, subs, new_schema, changed
+
+    def check_append(self, rows: dict[str, np.ndarray]) -> int:
+        """Fleet-wide append validation (no mutation); returns batch size."""
+        b, *_ = self._route_append(rows)
+        return b
+
+    def append(self, rows: dict[str, np.ndarray]) -> dict[int, object]:
+        """Route an append batch to its stripes; returns per-shard deltas.
+
+        Routing by policy: ``roundrobin`` continues the stripe sequence
+        (global row ``j`` -> shard ``j % num_shards``); a ``stripe_key``
+        fleet routes each row to the stripe *owning* its key (the first
+        stripe whose recorded key range reaches the key) with keys beyond
+        every range overflowing into the last stripe; plain ``range``
+        appends extend the tail stripe (new rows hold the highest global
+        positions).  The whole batch — column set, lengths, values, and
+        every destination shard's word capacity — is validated before any
+        shard mutates.
+
+        New values are propagated to EVERY active shard as a forced
+        schema update (all-zero equality pages where absent), keeping
+        value order aligned fleet-wide so aggregate shard-merges stay
+        correct; ``shard_values`` records only the values actually
+        present per stripe, so range routing keeps pruning soundly.
+        """
+        b, n0, active, subs, new_schema, changed = self._route_append(rows)
 
         # -- mutate
         deltas: dict[int, object] = {}
@@ -404,6 +432,17 @@ class ShardedFlashQL:
     devices: list[FlashDevice]
     queue_depth: int = 256  # per-shard admissions per flush
     fuse_across_shards: bool = True
+    # Pipelined (asynchronous per-shard) flushing: every shard's batch
+    # compiles into ONE fused device program (sensing + every aggregate
+    # reduce, see repro.query.compile.compile_flush) and shards dispatch
+    # back-to-back WITHOUT barriering — shard k+1's sensing is dispatched
+    # while shard k's reduce is still in flight (double-buffered; the only
+    # blocking point is the payload gather).  Routing-aware depths let
+    # range-pruned shards donate their queue slots to hot stripes.  False
+    # keeps the PR-4 lockstep flush (cross-shard jit-of-vmap groups +
+    # per-reduce-signature transfers) — the differential oracle.
+    pipeline: bool = False
+    coalesce_appends: bool = False
     compilers: list[QueryCompiler] = field(default_factory=list)
 
     _queues: list[list[tuple[int, Query]]] = field(default_factory=list)
@@ -413,7 +452,6 @@ class ShardedFlashQL:
     _cache_hits: dict[int, bool] = field(default_factory=dict)
     _next_ticket: int = 0
     _runners: dict = field(default_factory=dict, repr=False)
-    _exec_caches: list[dict] = field(default_factory=list, repr=False)
     _fleet_stack: tuple | None = field(default=None, repr=False)
     _masks: list[np.ndarray] | None = field(default=None, repr=False)
     # fused-path analogue of FlashDevice._batch_cache: memoized grouping,
@@ -423,6 +461,14 @@ class ShardedFlashQL:
     # stacked extra sensed planes per (shard, epoch, page tuple) — see
     # repro.query.aggregate.reduce_flush
     _extras_cache: dict = field(default_factory=dict, repr=False)
+    # pipelined mode: per-shard fused flush programs keyed on (shard,
+    # batch composition, epochs) + shared jitted runners per flush
+    # signature (identical shard schemas share one compiled program)
+    _flush_programs: dict = field(default_factory=dict, repr=False)
+    _runner_cache: dict = field(default_factory=dict, repr=False)
+    _mask_rows: dict = field(default_factory=dict, repr=False)
+    # queued (validated) append batches awaiting coalesced programming
+    _append_buf: list = field(default_factory=list, repr=False)
 
     # -- stats --------------------------------------------------------------
     queries_served: int = 0
@@ -431,6 +477,9 @@ class ShardedFlashQL:
     distinct_signatures: int = 0  # exact signatures seen (pre-padding)
     eager_plans: int = 0
     fused_flushes: int = 0
+    pipelined_flushes: int = 0
+    fused_dispatches: int = 0  # fused flush programs executed
+    host_transfers: int = 0  # device->host result copies
     shards_pruned: int = 0  # stripe-routing prunes (shard never sensed)
     serve_time_s: float = 0.0
     total_latency_s: float = 0.0
@@ -439,6 +488,7 @@ class ShardedFlashQL:
     # incremental ingest: appended rows and per-shard delta page programs
     rows_appended: int = 0
     esp_delta_programs: int = 0
+    append_batches_coalesced: int = 0
     shard_esp_programs: list[int] = field(default_factory=list)
     _host_postprocess: bool = False
 
@@ -451,7 +501,6 @@ class ShardedFlashQL:
                 for st, dev in zip(self.store.shards, self.devices)
             ]
         self._queues = [[] for _ in range(self.store.num_shards)]
-        self._exec_caches = [{} for _ in range(self.store.num_shards)]
         self.shard_traffic = [
             Counter() for _ in range(self.store.num_shards)
         ]
@@ -469,12 +518,26 @@ class ShardedFlashQL:
         the mutation could merge partials from different index versions).
         Each stripe programs only its delta pages; plans over columns
         whose index metadata did not change stay warm on every shard.
+
+        With ``coalesce_appends`` the (cumulatively validated) batch is
+        queued and returns 0; the next ``flush()`` — or an explicit
+        :meth:`apply_appends` — programs the whole queue as ONE delta per
+        touched page per stripe.
         """
         if self._meta:
             raise RuntimeError(
                 f"append() with {len(self._meta)} tickets in flight; "
                 "flush() the fleet first so no ticket spans the mutation"
             )
+        if self.coalesce_appends:
+            # shared validate+queue logic (per-batch column check, then
+            # cumulative schema/stripe-capacity check) — see
+            # repro.query.scheduler.queue_append
+            queue_append(self.store, self._append_buf, rows)
+            return 0
+        return self._program_append(rows)
+
+    def _program_append(self, rows: dict[str, np.ndarray]) -> int:
         deltas = self.store.append(rows)  # validates before mutating
         pages = 0
         for s, delta in deltas.items():
@@ -488,7 +551,24 @@ class ShardedFlashQL:
         # extras caches invalidate through the stores' content epochs)
         self._masks = None
         self._maskmat_cache.clear()
+        self._mask_rows.clear()
         return pages
+
+    @property
+    def appends_queued(self) -> int:
+        return len(self._append_buf)
+
+    def apply_appends(self) -> int:
+        """Program every queued append batch as one coalesced delta: a
+        stripe's page touched by many queued batches programs ONCE.  Ran
+        automatically at the top of ``flush()``; returns pages programmed.
+        """
+        if not self._append_buf:
+            return 0
+        rows = merge_appends(self._append_buf)
+        self.append_batches_coalesced += len(self._append_buf)
+        self._append_buf.clear()
+        return self._program_append(rows)
 
     # -- admission ----------------------------------------------------------
     def submit(self, query: Query) -> int:
@@ -508,6 +588,11 @@ class ShardedFlashQL:
         ``range``-striped store with a ``stripe_key`` this routes
         key-range queries to the few shards holding the range.
         """
+        # queued (coalesced) appends must land before admission: pruning
+        # consults per-stripe present values, and a query for a value that
+        # only exists in the queued batches would otherwise be pruned on
+        # every shard.  Appends arriving back-to-back still coalesce.
+        self.apply_appends()
         agg = validate_query(query, self.store.schema)
         ticket = self._next_ticket
         self._next_ticket += 1
@@ -537,9 +622,9 @@ class ShardedFlashQL:
 
         The stack is cached across flushes, keyed on each device's
         (epoch, slot count): steady-state serving reuses one device array.
-        Scratch *rewrites* change neither component, which is safe — fused
-        (spill-free) plans never gather scratch slots; allocating a new
-        scratch slot does change the slot count and rebuilds the stack.
+        Spilled values never enter the store at all (they live as
+        device-resident latch scratch inside the traced program), so
+        spilling plans cannot stale the cached stack.
         """
         if not self.fuse_across_shards:
             return None
@@ -572,10 +657,228 @@ class ShardedFlashQL:
 
     # -- serving -------------------------------------------------------------
     def flush(self) -> dict[int, QueryResult]:
-        """Drain up to ``queue_depth`` queries per shard, execute every
-        shard batch, reduce aggregates device-side, and gather completed
-        tickets — including tickets completed purely by stripe routing
-        (every shard pruned at ``submit``, nothing left to execute)."""
+        """Drain pending queries from every shard queue, execute, reduce
+        aggregates device-side, and gather completed tickets — including
+        tickets completed purely by stripe routing (every shard pruned at
+        ``submit``, nothing left to execute).
+
+        ``pipeline=True`` flushes shards *asynchronously*: each shard's
+        batch runs as one fused program (sensing + reduces, one payload)
+        and the next shard is dispatched while the previous one computes;
+        otherwise shards flush in lockstep under cross-shard jit-of-vmap
+        groups with per-reduce-signature transfers (the PR-4 path).
+        """
+        self.apply_appends()
+        if self.pipeline:
+            return self._flush_pipelined()
+        return self._flush_lockstep()
+
+    def _pop_batch(self, s: int, depth: int):
+        """Pop up to ``depth`` queries from shard ``s``'s queue, compiled
+        through its plan/exec caches; records plan traffic."""
+        batch, self._queues[s] = (
+            self._queues[s][:depth],
+            self._queues[s][depth:],
+        )
+        out = []
+        for ticket, q in batch:
+            cq = self.compilers[s].compile(q)
+            self._cache_hits[ticket] &= cq.cache_hit
+            out.append((ticket, q, cq, self.compilers[s].exec_for(cq)))
+            self.shard_wordlines[s] += record_plan_traffic(
+                self.shard_traffic[s], cq.plan
+            )
+        return out
+
+    def _collect_done(self, t1: float) -> dict[int, QueryResult]:
+        """Gather every ticket whose partials cover all active shards."""
+        expected = len(self.store.active)
+        results: dict[int, QueryResult] = {}
+        done = [
+            t
+            for t in list(self._partials)
+            if len(self._partials[t]) == expected
+        ]
+        for ticket in done:
+            q, t_submit = self._meta.pop(ticket)
+            parts = self._partials.pop(ticket)
+            agg = get_aggregator(q.agg)
+            self._host_postprocess |= agg.host_postprocess
+            results[ticket] = QueryResult(
+                ticket,
+                q,
+                agg.merge(parts, self.store),
+                t1 - t_submit,
+                cache_hit=self._cache_hits.pop(ticket),
+            )
+            self.total_latency_s += t1 - t_submit
+        self.queries_served += len(done)
+        return results
+
+    # -- pipelined (asynchronous per-shard) flushing -------------------------
+    def _routed_depths(self, queued: list[int]) -> dict[int, int]:
+        """Per-shard drain depths under a fleet-wide slot budget.
+
+        The budget is ``queue_depth`` slots per *active* shard; shards
+        whose queues are short — typically because stripe routing pruned
+        their traffic at ``submit`` — donate their unused slots to shards
+        with deeper queues.  A hot stripe can therefore drain far beyond
+        ``queue_depth`` in one flush instead of serializing over many.
+        """
+        budget = self.queue_depth * max(len(self.store.active), 1)
+        depths = {
+            s: min(len(self._queues[s]), self.queue_depth) for s in queued
+        }
+        leftover = budget - sum(depths.values())
+        # donate in equal shares across the shards that still have queue,
+        # so two hot stripes split the budget instead of the lower-indexed
+        # one absorbing it all
+        while leftover > 0:
+            needy = [
+                s for s in queued if len(self._queues[s]) > depths[s]
+            ]
+            if not needy:
+                break
+            share = max(1, leftover // len(needy))
+            for s in needy:
+                take = min(
+                    len(self._queues[s]) - depths[s], share, leftover
+                )
+                depths[s] += take
+                leftover -= take
+                if not leftover:
+                    break
+        return depths
+
+    def _mask_row(self, s: int) -> jax.Array:
+        """Device-resident (fleet_words,) valid-row mask of one shard."""
+        key = (s, self.store.shards[s].epoch)
+        row = self._mask_rows.get(key)
+        if row is None:
+            if len(self._mask_rows) >= 64:
+                self._mask_rows.clear()
+            row = jnp.asarray(self.store.shards[s].valid_words_mask())
+            self._mask_rows[key] = row
+        return row
+
+    def _dispatch_shard(self, s: int, depth: int):
+        """Compile + dispatch one shard's fused flush program (async).
+
+        Returns ``(s, compiled, program, payload, aggs)`` — the payload is
+        an in-flight device array; nothing blocks here.  Shards whose
+        device holds non-ESP pages run the synchronous per-group legacy
+        path instead (their reads may inject errors) and return None.
+        """
+        compiled = self._pop_batch(s, depth)
+        if not compiled:
+            return None
+        dev = self.devices[s]
+        st = self.store.shards[s]
+        aggs = [get_aggregator(q.agg) for _, q, _, _ in compiled]
+        execs = [e for _, _, _, e in compiled]
+        self.distinct_signatures += len(
+            {e.signature for e in execs if e is not None}
+        )
+        if dev._non_esp:
+            # legacy sync path: error-injecting eager guard + per-group
+            # reduce transfers
+            masked = dev.execute_batch_stacked(
+                [cq.plan for _, _, cq, _ in compiled],
+                execs=execs,
+                batch_key=tuple((s, cq.key) for _, _, cq, _ in compiled),
+            ) & self._mask_row(s)
+            self.signature_groups += dev.last_signature_groups
+            self.eager_plans += dev.last_eager_plans
+            partials, extra_counts, n_groups = reduce_flush(
+                masked,
+                [q.agg for _, q, _, _ in compiled],
+                [st] * len(compiled),
+                [(s, st.epoch)] * len(compiled),
+                interpret=dev.interpret,
+                extras_cache=self._extras_cache,
+            )
+            self.host_transfers += n_groups
+            self._record_partials(s, compiled, partials, extra_counts)
+            return None
+        # plan keys cover only the predicate side; the aggregate specs
+        # join the key so same-predicate flushes under different
+        # aggregates never share a program
+        key = (
+            s,
+            tuple(cq.key for _, _, cq, _ in compiled),
+            tuple(a.spec for a in aggs),
+            st.epoch,
+            dev.store.epoch,
+        )
+        program = self._flush_programs.get(key)
+        if program is None:
+            if len(self._flush_programs) >= 64:
+                self._flush_programs.clear()
+            program = compile_flush(
+                execs,
+                [q.agg for _, q, _, _ in compiled],
+                [st] * len(compiled),
+                [(s, st.epoch)] * len(compiled),
+                words=st.words,
+                interpret=dev.interpret,
+                runner_cache=self._runner_cache,
+                extras_cache=self._extras_cache,
+                pad=dev.pad_signatures,
+            )
+            self._flush_programs[key] = program
+        payload = program.run(dev.store.snapshot(), self._mask_row(s))
+        age_spill_blocks(dev.pec, execs)
+        self.fused_dispatches += 1
+        self.signature_groups += program.n_sense_groups
+        return (s, compiled, program, payload, aggs)
+
+    def _record_partials(self, s, compiled, partials, extra_counts):
+        for i, (ticket, _, _, _) in enumerate(compiled):
+            self._partials[ticket][s] = partials[i]
+            if extra_counts[i]:
+                self.shard_traffic[s][AGG_READ_SHAPE] += extra_counts[i]
+                self.shard_wordlines[s] += extra_counts[i]
+
+    def _gather_shard(self, inflight) -> None:
+        """Transfer one in-flight shard payload (the only blocking point)
+        and record its partials."""
+        s, compiled, program, payload, aggs = inflight
+        host = jax.device_get(payload)
+        self.host_transfers += 1
+        partials = program.unpack(host, aggs)
+        self._record_partials(s, compiled, partials, program.extra_counts)
+
+    def _flush_pipelined(self) -> dict[int, QueryResult]:
+        active = [s for s in self.store.active if self._queues[s]]
+        expected = len(self.store.active)
+        if not active and not any(
+            len(p) == expected for p in self._partials.values()
+        ):
+            return {}
+        t0 = time.perf_counter()
+        depths = self._routed_depths(active)
+        inflight: deque = deque()
+        for s in active:
+            entry = self._dispatch_shard(s, depths[s])
+            if entry is not None:
+                inflight.append(entry)
+            # double buffer: collect shard k's payload only after shard
+            # k+1 was dispatched, so the next shard's sensing overlaps the
+            # previous shard's in-flight reduce; at most two payloads are
+            # ever co-resident
+            while len(inflight) >= 2:
+                self._gather_shard(inflight.popleft())
+        while inflight:
+            self._gather_shard(inflight.popleft())
+        t1 = time.perf_counter()
+        results = self._collect_done(t1)
+        self.flushes += 1
+        self.pipelined_flushes += 1
+        self.serve_time_s += t1 - t0
+        return results
+
+    # -- lockstep (cross-shard fused) flushing -------------------------------
+    def _flush_lockstep(self) -> dict[int, QueryResult]:
         active = [s for s in self.store.active if self._queues[s]]
         expected = len(self.store.active)
         if not active and not any(
@@ -589,23 +892,10 @@ class ShardedFlashQL:
         plans: list = []  # parallel to items
         keys: list[tuple] = []  # (shard, plan-cache key) per item
         for s in active:
-            batch, self._queues[s] = (
-                self._queues[s][: self.queue_depth],
-                self._queues[s][self.queue_depth :],
-            )
-            cache = self._exec_caches[s]
-            for ticket, q in batch:
-                cq = self.compilers[s].compile(q)
-                self._cache_hits[ticket] &= cq.cache_hit
-                if cq.key not in cache:
-                    prune_stale_execs(cache, self.compilers[s].key_fresh)
-                    cache[cq.key] = self.devices[s].build_exec(cq.plan)
-                items.append((s, ticket, cache[cq.key]))
+            for ticket, q, cq, e in self._pop_batch(s, self.queue_depth):
+                items.append((s, ticket, e))
                 plans.append(cq.plan)
                 keys.append((s, cq.key))
-                self.shard_wordlines[s] += record_plan_traffic(
-                    self.shard_traffic[s], cq.plan
-                )
 
         if items:
             # execute: fused cross-shard vmap groups where snapshots stack.
@@ -654,13 +944,8 @@ class ShardedFlashQL:
                     )
                     pieces.append(out[:, :fleet_w])
                     order.extend(members)
-                for i, (s, _, e) in enumerate(items):
-                    if e is None:  # spilling plan: eager per-device fallback
-                        pieces.append(
-                            self.devices[s].execute(plans[i])[None]
-                        )
-                        order.append(i)
-                        self.eager_plans += 1
+                for s, _, e in items:
+                    age_spill_blocks(self.devices[s].pec, (e,))
                 self.fused_flushes += 1
             else:
                 # per-device fallback: each shard runs its own vmap batches
@@ -677,9 +962,7 @@ class ShardedFlashQL:
                     self.signature_groups += self.devices[
                         s
                     ].last_signature_groups
-                    self.eager_plans += sum(
-                        1 for i in ix if execs[i] is None
-                    )
+                    self.eager_plans += self.devices[s].last_eager_plans
             allout = reorder_rows(pieces, order)
 
             # reduce: mask shard partials (identity pad rows, word slack,
@@ -690,7 +973,7 @@ class ShardedFlashQL:
                 tuple(s for s, _, _ in items)
             )
             specs = [self._meta[t][0].agg for _, t, _ in items]
-            partials, extra_counts = reduce_flush(
+            partials, extra_counts, n_groups = reduce_flush(
                 masked,
                 specs,
                 [self.store.shards[s] for s, _, _ in items],
@@ -701,6 +984,7 @@ class ShardedFlashQL:
                 interpret=self.devices[0].interpret,
                 extras_cache=self._extras_cache,
             )
+            self.host_transfers += n_groups
             jax.block_until_ready(masked)
 
             for i, (s, ticket, _) in enumerate(items):
@@ -713,26 +997,7 @@ class ShardedFlashQL:
                     self.shard_wordlines[s] += extra_counts[i]
 
         t1 = time.perf_counter()
-        results: dict[int, QueryResult] = {}
-        done = [
-            t
-            for t in list(self._partials)
-            if len(self._partials[t]) == expected
-        ]
-        for ticket in done:
-            q, t_submit = self._meta.pop(ticket)
-            parts = self._partials.pop(ticket)
-            agg = get_aggregator(q.agg)
-            self._host_postprocess |= agg.host_postprocess
-            results[ticket] = QueryResult(
-                ticket,
-                q,
-                agg.merge(parts, self.store),
-                t1 - t_submit,
-                cache_hit=self._cache_hits.pop(ticket),
-            )
-            self.total_latency_s += t1 - t_submit
-        self.queries_served += len(done)
+        results = self._collect_done(t1)
         self.flushes += 1
         self.serve_time_s += t1 - t0
         return results
@@ -775,6 +1040,9 @@ class ShardedFlashQL:
             "queries_served": self.queries_served,
             "flushes": self.flushes,
             "fused_flushes": self.fused_flushes,
+            "pipelined_flushes": self.pipelined_flushes,
+            "fused_dispatches": self.fused_dispatches,
+            "host_transfers": self.host_transfers,
             "shards_pruned": self.shards_pruned,
             "vmap_batches": self.signature_groups,
             "distinct_signatures": self.distinct_signatures,
@@ -793,6 +1061,7 @@ class ShardedFlashQL:
             ),
             "rows_appended": self.rows_appended,
             "esp_delta_programs": self.esp_delta_programs,
+            "append_batches_coalesced": self.append_batches_coalesced,
         }
 
     def projection(self, ssd: SSDConfig = DEFAULT_SSD) -> dict:
@@ -853,11 +1122,14 @@ def build_sharded_flashql(
     queue_depth: int = 256,
     interpret: bool = True,
     reserve_rows: int = 0,
+    pipeline: bool = False,
+    coalesce_appends: bool = False,
 ) -> ShardedFlashQL:
     """Ingest ``table``, program ``num_shards`` fresh devices, return the
     serving frontend — the one-call path used by tests and benchmarks.
     ``reserve_rows`` leaves per-stripe word capacity for later
-    :meth:`ShardedFlashQL.append` batches."""
+    :meth:`ShardedFlashQL.append` batches; ``pipeline`` enables the
+    asynchronous per-shard fused flush (see :class:`ShardedFlashQL`)."""
     store = ShardedBitmapStore(
         num_shards=num_shards,
         policy=policy,
@@ -870,4 +1142,10 @@ def build_sharded_flashql(
         for _ in range(num_shards)
     ]
     store.program(devices, warmup=warmup)
-    return ShardedFlashQL(store, devices, queue_depth=queue_depth)
+    return ShardedFlashQL(
+        store,
+        devices,
+        queue_depth=queue_depth,
+        pipeline=pipeline,
+        coalesce_appends=coalesce_appends,
+    )

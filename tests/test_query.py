@@ -26,6 +26,7 @@ from repro.query import (
     Range,
     lower,
 )
+from repro.query.oracle import np_select as _np_oracle
 from repro.query.ast import and_ as qand, or_ as qor
 
 W = 8  # words per page for expression-level tests
@@ -39,32 +40,6 @@ def _rand_table(rng, n):
     }
 
 
-def _np_oracle(pred, table, n):
-    from repro.query.ast import And, Or
-
-    if isinstance(pred, Eq):
-        return table[pred.column] == pred.value
-    if isinstance(pred, In):
-        return np.isin(table[pred.column], pred.values)
-    if isinstance(pred, Range):
-        m = np.ones(n, bool)
-        if pred.lo is not None:
-            m &= table[pred.column] >= pred.lo
-        if pred.hi is not None:
-            m &= table[pred.column] <= pred.hi
-        return m
-    if isinstance(pred, Not):
-        return ~_np_oracle(pred.child, table, n)
-    if isinstance(pred, And):
-        m = np.ones(n, bool)
-        for c in pred.children:
-            m &= _np_oracle(c, table, n)
-        return m
-    assert isinstance(pred, Or)
-    m = np.zeros(n, bool)
-    for c in pred.children:
-        m |= _np_oracle(c, table, n)
-    return m
 
 
 def _random_pred(rng, depth=0):
@@ -215,8 +190,12 @@ def test_warmup_placement_uses_auto_layout():
     assert plan.num_sensing_ops == 1
 
 
-def test_eager_fallback_for_spilling_plans():
-    """Range plans spill; the scheduler must still serve them correctly."""
+def test_spilling_plans_join_the_batched_flush():
+    """Range plans spill; since the one-dispatch flush they lower to
+    batchable ExecPlans (device-resident scratch) instead of falling back
+    to eager per-query execution — and repeated flushes must not thrash
+    the device snapshot (the pre-pipeline engine re-uploaded the packed
+    buffer after every scratch ESP write)."""
     rng = np.random.default_rng(6)
     n = 1200
     table = {"age": rng.integers(0, 64, n)}
@@ -227,8 +206,14 @@ def test_eager_fallback_for_spilling_plans():
     sched = BatchScheduler(dev, store)
     q = Query(Range("age", 13, 37))
     (r,) = sched.serve([q])
-    assert sched.eager_plans >= 1
+    assert sched.eager_plans == 0  # spilling plans batch now
     assert r.count == int(((table["age"] >= 13) & (table["age"] <= 37)).sum())
+    uploads = dev.store.snapshot_uploads
+    (r2,) = sched.serve([q])
+    assert r2.count == r.count
+    assert dev.store.snapshot_uploads == uploads, (
+        "a warm spilling flush must not re-upload the packed store"
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -5,11 +5,15 @@ A seeded generator draws random ``Eq``/``In``/``Range``/``And``/``Or``/
 MASK, and a randomly drawn aggregate (SUM/AVG/MIN/MAX/TOP-K/GROUP BY) —
 and every query executes on
 
-* unsharded FlashQL (``BatchScheduler`` over one ``FlashDevice``),
+* unsharded FlashQL (``BatchScheduler`` over one ``FlashDevice``), on both
+  the fused one-dispatch flush and the per-reduce-group legacy flush,
 * sharded FlashQL (``ShardedFlashQL``) for shard counts {1, 2, 3} under
   both stripe policies (plus a ``stripe_key``-sorted range fleet, which
   exercises shard routing), including row counts that do not divide
   evenly,
+* the asynchronous per-shard pipelined flush (``pipeline=True``) against
+  the lockstep oracle — composed with routing and, in the append stream,
+  with coalesced appends,
 
 and the results are checked **bit-exact** (exact-integer for SUM and the
 AVG numerator) against the ``eval_expr`` oracle on the logical bitmap
@@ -45,7 +49,8 @@ from repro.query import (
     build_sharded_flashql,
     lower,
 )
-from repro.query.ast import And, Or, and_ as qand, normalize_agg, or_ as qor
+from repro.query.oracle import np_select as _np_oracle
+from repro.query.ast import and_ as qand, normalize_agg, or_ as qor
 
 from tests._hypothesis_compat import given, settings, st
 
@@ -146,30 +151,6 @@ def _np_agg_oracle(spec, sel, table):
     return out
 
 
-def _np_oracle(pred, table, n):
-    if isinstance(pred, Eq):
-        return table[pred.column] == pred.value
-    if isinstance(pred, In):
-        return np.isin(table[pred.column], pred.values)
-    if isinstance(pred, Range):
-        m = np.ones(n, bool)
-        if pred.lo is not None:
-            m &= table[pred.column] >= pred.lo
-        if pred.hi is not None:
-            m &= table[pred.column] <= pred.hi
-        return m
-    if isinstance(pred, Not):
-        return ~_np_oracle(pred.child, table, n)
-    if isinstance(pred, And):
-        m = np.ones(n, bool)
-        for c in pred.children:
-            m &= _np_oracle(c, table, n)
-        return m
-    assert isinstance(pred, Or)
-    m = np.zeros(n, bool)
-    for c in pred.children:
-        m |= _np_oracle(c, table, n)
-    return m
 
 
 def _run_differential(seed: int, n: int, policy: str) -> None:
@@ -182,12 +163,21 @@ def _run_differential(seed: int, n: int, policy: str) -> None:
         + [Query(p, agg=_random_agg(rng)) for p in preds]
     )
 
-    # unsharded reference
+    # unsharded reference (fused one-dispatch flush), checked against the
+    # per-reduce-group legacy flush on the same device
     store = BitmapStore()
     store.ingest(table)
     dev = FlashDevice(num_planes=2)
     store.program(dev)
     ref = BatchScheduler(dev, store).serve(queries)
+    legacy = BatchScheduler(dev, store, fuse_flush=False).serve(queries)
+    for a, b in zip(ref, legacy):
+        if isinstance(normalize_agg(a.query.agg), Mask):
+            np.testing.assert_array_equal(
+                np.asarray(a.mask.words), np.asarray(b.mask.words)
+            )
+        else:
+            assert a.value == b.value, (seed, n, policy, a.query)
 
     sharded = {
         s: build_sharded_flashql(
@@ -195,10 +185,24 @@ def _run_differential(seed: int, n: int, policy: str) -> None:
         ).serve(queries)
         for s in SHARD_COUNTS
     }
+    # asynchronous per-shard fused flushing vs the lockstep oracle above
+    # (submission order is preserved by construction of serve())
+    sharded["pipelined"] = build_sharded_flashql(
+        table, 3, policy=policy, num_planes=2, pipeline=True
+    ).serve(queries)
     if policy == "range":
         # stripe_key-sorted fleet: same results, but shard routing prunes
         sharded["routed"] = build_sharded_flashql(
             table, 3, policy="range", stripe_key="age", num_planes=2
+        ).serve(queries)
+        # routing + async pipelining composed
+        sharded["routed-pipelined"] = build_sharded_flashql(
+            table,
+            3,
+            policy="range",
+            stripe_key="age",
+            num_planes=2,
+            pipeline=True,
         ).serve(queries)
 
     for i, q in enumerate(queries):
@@ -307,6 +311,15 @@ def _run_append_differential(seed: int, n: int, policy: str) -> None:
             for s in SHARD_COUNTS
         },
     }
+    # async fused flushing and append coalescing ride the same stream
+    systems["pipelined"] = build_sharded_flashql(
+        prefix(n0), 2, policy=policy, num_planes=2,
+        reserve_rows=reserve, pipeline=True,
+    )
+    systems["coalesced"] = build_sharded_flashql(
+        prefix(n0), 2, policy=policy, num_planes=2,
+        reserve_rows=reserve, pipeline=True, coalesce_appends=True,
+    )
     if policy == "range":
         systems["routed"] = build_sharded_flashql(
             prefix(n0), 3, policy="range", stripe_key="age",

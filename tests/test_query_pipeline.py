@@ -1,0 +1,453 @@
+"""One-dispatch flush invariants: fused programs, single host transfers,
+async shard pipelining, routed queue depths, and append coalescing.
+
+The contract of the pipelined serving stack, asserted piece by piece:
+
+* a mixed-kind flush on ``BatchScheduler`` performs EXACTLY ONE host
+  transfer (``jax.device_get`` counted by monkeypatch, mirroring the PR-3
+  vmap-group assertion) and at most one fused dispatch per flush
+  signature — recurring compositions reuse one jitted program;
+* spilling (deep-range) plans join the fused flush instead of running
+  eagerly, and their scratch stays device-resident;
+* the asynchronous sharded flush matches the lockstep path bit-exactly,
+  spends one transfer per shard program, and preserves submission order;
+* routing-aware queue depths let range-pruned shards donate their slots,
+  draining a hot stripe in one flush;
+* coalesced appends program one delta per touched page for a whole queue
+  of small batches, with the tickets-in-flight refusal intact.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.query import (
+    Avg,
+    BatchScheduler,
+    BitmapStore,
+    Count,
+    Eq,
+    FlashDevice,
+    GroupBy,
+    In,
+    Mask,
+    Max,
+    Min,
+    Query,
+    Range,
+    Sum,
+    TopK,
+    build_sharded_flashql,
+)
+from repro.query.ast import and_ as qand
+from repro.query.oracle import np_select as _np_select
+
+ALL_AGGS = (
+    Count(),
+    Mask(),
+    Sum("sales"),
+    Avg("sales"),
+    Min("sales"),
+    Max("sales"),
+    TopK("device", 3),
+    GroupBy("device", Sum("sales")),
+)
+
+
+def _table(rng, n):
+    return {
+        "country": rng.integers(0, 6, n),
+        "device": rng.integers(0, 4, n),
+        "sales": rng.integers(0, 500, n),
+    }
+
+
+def _scheduler(table, planes=2, **kw):
+    store = BitmapStore()
+    store.ingest(table)
+    dev = FlashDevice(num_planes=planes)
+    store.program(dev)
+    return BatchScheduler(dev, store, **kw)
+
+
+def _mixed_queries(include_spill=True):
+    preds = [
+        Eq("country", 1),
+        qand(Eq("country", 2), Eq("device", 1)),
+        In("device", [0, 2]),
+    ]
+    if include_spill:
+        preds.append(Range("sales", 13, 437))  # deep range: spills
+    return [Query(p, agg=a) for p in preds for a in ALL_AGGS]
+
+
+
+
+class _TransferCounter:
+    """Counts real ``jax.device_get`` calls inside a with-block."""
+
+    def __init__(self, monkeypatch):
+        self.calls = 0
+        real = jax.device_get
+
+        def counted(x):
+            self.calls += 1
+            return real(x)
+
+        monkeypatch.setattr(jax, "device_get", counted)
+
+
+# ---------------------------------------------------------------------------
+# one transfer, one dispatch per flush signature
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_flush_is_one_transfer_one_dispatch(monkeypatch):
+    """A flush mixing EVERY aggregate kind (and a spilling range) costs
+    exactly one device_get and one fused program execution."""
+    rng = np.random.default_rng(0)
+    n = 700
+    table = _table(rng, n)
+    sched = _scheduler(table)
+    queries = _mixed_queries()
+    for q in queries:
+        sched.submit(q)
+    counter = _TransferCounter(monkeypatch)
+    results = sched.flush()
+    assert counter.calls == 1, "fused flush must device_get exactly once"
+    assert sched.host_transfers == 1
+    assert sched.fused_dispatches == 1
+    assert sched.flushes == 1
+    assert len(results) == len(queries)
+    # spot-check against numpy while the results are here
+    by_ticket = [results[t] for t in sorted(results)]
+    for q, r in zip(queries, by_ticket):
+        sel = _np_select(q.where, table, n)
+        if isinstance(q.agg, Count):
+            assert r.value == int(sel.sum())
+        elif isinstance(q.agg, Sum):
+            assert r.value == int(table["sales"][sel].sum())
+        elif isinstance(q.agg, Mask):
+            np.testing.assert_array_equal(
+                np.asarray(r.value.to_bits()).astype(bool), sel
+            )
+
+
+def test_flush_signature_programs_are_reused():
+    """Recurring flush compositions reuse ONE jitted program: the runner
+    cache holds a single entry however many times the flush repeats (<=1
+    fused dispatch per flush signature)."""
+    rng = np.random.default_rng(1)
+    sched = _scheduler(_table(rng, 300))
+    queries = _mixed_queries()
+    sched.serve(queries)
+    programs = len(sched._flush_programs)
+    runners = len(sched._runner_cache)
+    assert programs == 1 and runners == 1
+    for _ in range(3):
+        sched.serve(queries)
+    assert len(sched._flush_programs) == 1
+    assert len(sched._runner_cache) == 1
+    assert sched.fused_dispatches == sched.flushes == 4
+    assert sched.host_transfers == 4  # still exactly one per flush
+
+
+def test_legacy_path_matches_fused():
+    """fuse_flush=False (the per-reduce-group oracle) returns identical
+    values and strictly more host transfers."""
+    rng = np.random.default_rng(2)
+    table = _table(rng, 513)
+    queries = _mixed_queries()
+    fused = _scheduler(table)
+    legacy = _scheduler(table, fuse_flush=False)
+    a = fused.serve(queries)
+    b = legacy.serve(queries)
+    for x, y in zip(a, b):
+        if isinstance(x.query.agg, Mask):
+            np.testing.assert_array_equal(
+                np.asarray(x.value.words), np.asarray(y.value.words)
+            )
+        else:
+            assert x.value == y.value, x.query
+    assert fused.host_transfers == 1
+    assert legacy.host_transfers > 1  # one per reduce signature
+
+
+def test_same_predicate_different_aggregates_across_flushes():
+    """Flush programs must key on the aggregates too: plan-cache keys
+    cover only the predicate, so Min then Max (or Count then Sum) over
+    the SAME predicate in separate flushes must not reuse each other's
+    compiled program (regression: the cached Min program silently
+    answered the Max query)."""
+    rng = np.random.default_rng(10)
+    n = 300
+    table = _table(rng, n)
+    sel = table["country"] == 1
+    sched = _scheduler(table)
+    (r_min,) = sched.serve([Query(Eq("country", 1), agg=Min("sales"))])
+    (r_max,) = sched.serve([Query(Eq("country", 1), agg=Max("sales"))])
+    (r_cnt,) = sched.serve([Query(Eq("country", 1), agg=Count())])
+    (r_sum,) = sched.serve([Query(Eq("country", 1), agg=Sum("sales"))])
+    assert r_min.value == int(table["sales"][sel].min())
+    assert r_max.value == int(table["sales"][sel].max())
+    assert r_cnt.value == int(sel.sum())
+    assert r_sum.value == int(table["sales"][sel].sum())
+    # pipelined sharded path keys per-shard programs the same way
+    sq = build_sharded_flashql(table, 2, num_planes=2, pipeline=True)
+    (r_min,) = sq.serve([Query(Eq("country", 1), agg=Min("sales"))])
+    (r_max,) = sq.serve([Query(Eq("country", 1), agg=Max("sales"))])
+    assert r_min.value == int(table["sales"][sel].min())
+    assert r_max.value == int(table["sales"][sel].max())
+
+
+# ---------------------------------------------------------------------------
+# async sharded flushing
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_sharded_matches_lockstep_one_transfer_per_shard():
+    rng = np.random.default_rng(3)
+    n = 1003
+    table = _table(rng, n)
+    queries = _mixed_queries()
+    lock = build_sharded_flashql(table, 3, num_planes=2)
+    pipe = build_sharded_flashql(table, 3, num_planes=2, pipeline=True)
+    a = lock.serve(queries)
+    b = pipe.serve(queries)
+    # submission order preserved on both paths
+    assert [r.query for r in b] == queries
+    for x, y in zip(a, b):
+        if isinstance(x.query.agg, Mask):
+            np.testing.assert_array_equal(
+                np.asarray(x.value.words), np.asarray(y.value.words)
+            )
+        else:
+            assert x.value == y.value, x.query
+    s = pipe.stats()
+    assert s["pipelined_flushes"] == s["flushes"]
+    # one fused program and one payload transfer per shard per flush
+    active = len(pipe.store.active)
+    assert s["fused_dispatches"] == s["flushes"] * active
+    assert s["host_transfers"] == s["flushes"] * active
+    # the lockstep oracle spends one transfer per reduce signature instead
+    assert lock.stats()["host_transfers"] > lock.stats()["flushes"]
+
+
+def test_pipelined_non_esp_shard_falls_back_per_group():
+    """A shard device holding a non-ESP page must leave the fused path
+    (it never injects read errors) and still serve exact results."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(4)
+    n = 200
+    table = _table(rng, n)
+    sq = build_sharded_flashql(table, 2, pipeline=True)
+    w = sq.store.shards[0].words
+    sq.devices[0].fc_write(
+        "telemetry",
+        jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint32)),
+        esp=False,
+    )
+    (r,) = sq.serve([Query(Eq("country", 1))])
+    assert r.count == int((table["country"] == 1).sum())
+
+
+def test_routed_queue_depth_drains_hot_stripe_in_one_flush():
+    """Range-pruned shards donate their queue slots: a stripe_key fleet
+    whose traffic routes to one stripe drains queue_depth * shards from
+    that stripe per flush instead of serializing over many flushes."""
+    rng = np.random.default_rng(5)
+    n = 400
+    table = {
+        "uid": rng.integers(0, 1000, n),
+        "sales": rng.integers(0, 50, n),
+    }
+    hot = [
+        Query(Range("uid", 0, 99), agg=a)
+        for a in (Count(), Sum("sales"), Min("sales"), Max("sales"))
+    ] * 2  # 8 queries, all routed to the first stripe
+    sq = build_sharded_flashql(
+        table,
+        4,
+        policy="range",
+        stripe_key="uid",
+        num_planes=2,
+        queue_depth=2,
+        pipeline=True,
+    )
+    res = sq.serve(hot)
+    sel = (table["uid"] >= 0) & (table["uid"] <= 99)
+    assert res[0].value == int(sel.sum())
+    assert res[1].value == int(table["sales"][sel].sum())
+    assert sq.stats()["shards_pruned"] > 0
+    # budget = queue_depth * 4 active shards = 8 slots: one flush drains
+    # the hot stripe's 8 queries (lockstep at depth 2 would need 4)
+    assert sq.flushes == 1, sq.flushes
+    lock = build_sharded_flashql(
+        table,
+        4,
+        policy="range",
+        stripe_key="uid",
+        num_planes=2,
+        queue_depth=2,
+    )
+    lock.serve(hot)
+    assert lock.flushes == 4
+
+
+# ---------------------------------------------------------------------------
+# device-resident scratch (spill push-down)
+# ---------------------------------------------------------------------------
+
+
+def test_spilling_plans_share_the_fused_flush(monkeypatch):
+    """Deep ranges (spilling plans) execute inside the fused program: one
+    transfer for a flush of nothing but spilling aggregates, correct
+    values, zero eager fallbacks, and no snapshot re-upload when warm."""
+    rng = np.random.default_rng(6)
+    n = 900
+    table = {"age": rng.integers(0, 64, n)}
+    store = BitmapStore()
+    store.ingest(table)
+    dev = FlashDevice(num_planes=2)
+    store.program(dev)
+    sched = BatchScheduler(dev, store)
+    queries = [
+        Query(Range("age", 13, 37), agg=Count()),
+        Query(Range("age", 5, 60), agg=Sum("age")),
+        Query(Range("age", 13, 37), agg=Max("age")),
+    ]
+    sched.serve(queries)  # warm (jit + caches)
+    uploads = dev.store.snapshot_uploads
+    for q in queries:
+        sched.submit(q)
+    counter = _TransferCounter(monkeypatch)
+    results = sched.flush()
+    assert counter.calls == 1
+    assert sched.eager_plans == 0
+    assert dev.store.snapshot_uploads == uploads
+    vals = [results[t].value for t in sorted(results)]
+    sel1 = (table["age"] >= 13) & (table["age"] <= 37)
+    sel2 = (table["age"] >= 5) & (table["age"] <= 60)
+    assert vals[0] == int(sel1.sum())
+    assert vals[1] == int(table["age"][sel2].sum())
+    assert vals[2] == int(table["age"][sel1].max())
+
+
+# ---------------------------------------------------------------------------
+# append coalescing
+# ---------------------------------------------------------------------------
+
+
+def test_coalesced_appends_program_one_delta_per_page():
+    rng = np.random.default_rng(7)
+    n = 400
+    table = _table(rng, n)
+    half = {c: v[: n // 2] for c, v in table.items()}
+
+    def build(**kw):
+        store = BitmapStore()
+        store.ingest(half, reserve_rows=n)
+        dev = FlashDevice(num_planes=2)
+        store.program(dev)
+        return BatchScheduler(dev, store, **kw)
+
+    imm = build()
+    co = build(coalesce_appends=True)
+    one = build()
+    step = n // 20
+    batches = [
+        {c: v[n // 2 + i * step : n // 2 + (i + 1) * step] for c, v in table.items()}
+        for i in range(10)
+    ]
+    imm_pages = sum(imm.append(b) for b in batches)
+    for b in batches:
+        assert co.append(b) == 0  # queued, nothing programmed yet
+    assert co.appends_queued == 10
+    co_pages = co.apply_appends()
+    # the coalesced queue programs exactly what ONE combined batch would
+    combined = {
+        c: np.concatenate([b[c] for b in batches]) for c in batches[0]
+    }
+    one_pages = one.append(combined)
+    assert co_pages == one_pages
+    assert co_pages < imm_pages
+    assert co.stats()["append_batches_coalesced"] == 10
+    # identical serving results afterwards
+    qs = [Query(Eq("country", 2), agg=a) for a in (Count(), Sum("sales"))]
+    assert [r.value for r in imm.serve(qs)] == [
+        r.value for r in co.serve(qs)
+    ]
+
+
+def test_coalesced_appends_keep_inflight_refusal_and_validation():
+    rng = np.random.default_rng(8)
+    n = 200
+    table = _table(rng, n)
+    half = {c: v[: n // 2] for c, v in table.items()}
+    store = BitmapStore()
+    store.ingest(half, reserve_rows=n // 2)
+    dev = FlashDevice(num_planes=2)
+    store.program(dev)
+    sched = BatchScheduler(dev, store, coalesce_appends=True)
+    batch = {c: v[n // 2 : n // 2 + 10] for c, v in table.items()}
+    sched.submit(Query(Eq("country", 1)))
+    with pytest.raises(RuntimeError, match="pending"):
+        sched.append(batch)
+    sched.flush()
+    sched.append(batch)
+    # a later batch with unknown/missing columns must reject (the merge
+    # is built from the first batch's columns — regression: an unknown
+    # column was silently dropped)
+    with pytest.raises(ValueError, match="bogus"):
+        sched.append({**batch, "bogus": np.zeros(10, int)})
+    with pytest.raises(ValueError, match="missing"):
+        sched.append({"country": batch["country"]})
+    # cumulative capacity: a queued stream must not overflow the reserve
+    big = {c: np.concatenate([v] * 3) for c, v in table.items()}
+    with pytest.raises(ValueError, match="overflow"):
+        sched.append(big)
+    assert sched.appends_queued == 1  # the bad batch was never queued
+    # a flush applies the queue; queries see the appended rows
+    m = n // 2 + 10
+    (r,) = sched.serve([Query(Eq("country", 1))])
+    assert r.value == int((table["country"][:m] == 1).sum())
+
+
+def test_sharded_coalesced_appends_match_immediate():
+    rng = np.random.default_rng(9)
+    n = 300
+    table = _table(rng, n)
+    half = {c: v[: n // 2] for c, v in table.items()}
+    step = n // 10
+    batches = [
+        {c: v[n // 2 + i * step : n // 2 + (i + 1) * step] for c, v in table.items()}
+        for i in range(4)
+    ]
+    imm = build_sharded_flashql(half, 3, num_planes=2, reserve_rows=n)
+    co = build_sharded_flashql(
+        half,
+        3,
+        num_planes=2,
+        reserve_rows=n,
+        pipeline=True,
+        coalesce_appends=True,
+    )
+    for b in batches:
+        imm.append(b)
+        assert co.append(b) == 0
+    m = n // 2 + 4 * step
+    qs = [
+        Query(Eq("country", 2), agg=a)
+        for a in (Count(), Sum("sales"), Mask())
+    ]
+    a = imm.serve(qs)
+    b = co.serve(qs)  # flush applies the queued appends first
+    sel = table["country"][:m] == 2
+    assert a[0].value == b[0].value == int(sel.sum())
+    assert a[1].value == b[1].value == int(table["sales"][:m][sel].sum())
+    np.testing.assert_array_equal(
+        np.asarray(a[2].value.to_bits()), np.asarray(b[2].value.to_bits())
+    )
+    assert co.esp_delta_programs < imm.esp_delta_programs
