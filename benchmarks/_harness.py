@@ -11,12 +11,18 @@ during a quiet spell.  Every benchmark gate in this repo therefore
 
 Callers warm every configuration (jit + plan caches) BEFORE handing it
 to the harness: these benchmarks measure steady-state serving.
+
+Quantile math lives in :mod:`repro.query.telemetry` (the repo's single
+``percentile``/``Histogram`` implementation); this module re-exports
+``percentile`` and builds ``latency_summary`` on a ``Histogram`` so
+benchmarks and the serving telemetry can never disagree on a tail.
 """
 
 from __future__ import annotations
 
-import math
 import time
+
+from repro.query.telemetry import Histogram, percentile  # noqa: F401
 
 REPS = 5  # best-of-N: one-shot wall timings are too noisy for a gate
 
@@ -43,26 +49,26 @@ def interleaved_best_of(timers: dict, reps: int = REPS) -> dict:
     return best
 
 
-def percentile(samples, q: float) -> float:
-    """The ``q``-th percentile (nearest-rank) of a non-empty sample set."""
-    s = sorted(samples)
-    if not s:
-        raise ValueError("no samples")
-    rank = min(max(1, math.ceil(q / 100 * len(s))), len(s))  # 1-based
-    return s[rank - 1]
-
-
 def latency_summary(samples) -> dict:
     """p50/p95/mean of per-flush wall-clock samples (seconds).
 
     Throughput gates use best-of-N interleaved timing (above); latency
     distributions additionally need tail percentiles, because a pipelined
     flush that overlaps shards can improve the mean while regressing the
-    tail (or vice versa) — benchmarks report both.
+    tail (or vice versa) — benchmarks report both.  Built on the
+    telemetry ``Histogram`` (capacity sized to the sample set, so nothing
+    is dropped here).
     """
+    samples = list(samples)
+    if not samples:
+        raise ValueError("no samples")
+    h = Histogram(capacity=len(samples))
+    for s in samples:
+        h.observe(s)
+    summary = h.summary()
     return {
-        "p50": percentile(samples, 50),
-        "p95": percentile(samples, 95),
-        "mean": sum(samples) / len(samples),
-        "n": len(samples),
+        "p50": summary["p50"],
+        "p95": summary["p95"],
+        "mean": summary["mean"],
+        "n": summary["count"],
     }

@@ -164,13 +164,16 @@ def main() -> None:
         f"{qps_reb:8.1f} q/s"
     )
     print(f"speedup: {qps_inc / qps_reb:.2f}x")
-    s = sched.stats()
+    # ingest + plan-cache accounting and the SSD projection all read out
+    # of one telemetry snapshot (counters + registered provider sections)
+    snap = sched.telemetry.snapshot()
+    counters, cache = snap["counters"], snap["plan_cache"]
     print(
-        f"rows appended: {s['rows_appended']}  delta ESP programs: "
-        f"{s['esp_delta_programs']}  plan cache: "
-        f"{s['plan_cache_hits']} hits / {s['plan_cache_misses']} misses"
+        f"rows appended: {counters['rows_appended']}  delta ESP programs: "
+        f"{counters['esp_delta_programs']}  plan cache: "
+        f"{cache['hits']} hits / {cache['misses']} misses"
     )
-    proj = sched.projection()
+    proj = snap["projection"]
     print(
         f"SSD projection incl. delta programs: "
         f"{proj['fc_time_s'] * 1e3:.2f} ms, {proj['fc_energy_j']:.3f} J, "

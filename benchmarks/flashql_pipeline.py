@@ -159,27 +159,32 @@ def main() -> None:
             assert a.value == b.value, (a.query, a.value, b.value)
     print("lockstep == pipelined == numpy oracle")
 
-    # dispatch + host-transfer accounting per flush (warm steady state)
+    # dispatch + host-transfer accounting per flush (warm steady state),
+    # read from the unified telemetry registry rather than scheduler fields
     for sq, name in ((lock, "lockstep"), (pipe, "pipelined")):
-        f0, t0, d0 = (
-            sq.flushes,
-            sq.host_transfers,
-            sq.fused_dispatches,
-        )
+        c0 = sq.telemetry.snapshot()["counters"]
         sq.serve(queries)
-        flushes = sq.flushes - f0
+        c1 = sq.telemetry.snapshot()["counters"]
+        flushes = c1["flushes"] - c0.get("flushes", 0)
+        transfers = c1["host_transfers"] - c0.get("host_transfers", 0)
+        dispatches = c1.get("fused_dispatches", 0) - c0.get(
+            "fused_dispatches", 0
+        )
         print(
             f"{name:9s}: {flushes} flushes, "
-            f"{(sq.host_transfers - t0) / flushes:.1f} host transfers and "
-            f"{(sq.fused_dispatches - d0) / flushes:.1f} fused dispatches "
+            f"{transfers / flushes:.1f} host transfers and "
+            f"{dispatches / flushes:.1f} fused dispatches "
             f"per flush"
         )
     active = len(pipe.store.active)
-    f0, t0 = pipe.flushes, pipe.host_transfers
+    c0 = pipe.telemetry.snapshot()["counters"]
     pipe.serve(queries)
-    assert (
-        pipe.host_transfers - t0 == (pipe.flushes - f0) * active
-    ), "pipelined flush must spend exactly one transfer per shard program"
+    c1 = pipe.telemetry.snapshot()["counters"]
+    assert c1["host_transfers"] - c0["host_transfers"] == (
+        c1["flushes"] - c0["flushes"]
+    ) * active, (
+        "pipelined flush must spend exactly one transfer per shard program"
+    )
 
     best = interleaved_best_of(
         {

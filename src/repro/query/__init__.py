@@ -33,7 +33,11 @@ Database Analytics*):
   ``stripe_key`` so range queries route to few shards), queries scattered
   to per-shard plan caches, shard batches fused under one ``jit(vmap)``
   per signature group, partial results gathered through each aggregate's
-  shard-merge rule with a multi-chip time/energy projection.
+  shard-merge rule with a multi-chip time/energy projection;
+* :mod:`repro.query.telemetry` — ``Telemetry``: the unified metrics
+  registry (counters/gauges/histograms), flush-lifecycle trace spans
+  exportable as Chrome trace-event JSON, per-query sensing attribution,
+  and the slow-query log shared by both schedulers.
 """
 
 from repro.query.aggregate import (
@@ -74,6 +78,12 @@ from repro.query.shard import (
     ShardedFlashQL,
     build_sharded_flashql,
 )
+from repro.query.telemetry import (
+    Histogram,
+    Telemetry,
+    percentile,
+    validate_trace,
+)
 
 __all__ = [
     "Agg",
@@ -109,4 +119,8 @@ __all__ = [
     "ShardedBitmapStore",
     "ShardedFlashQL",
     "build_sharded_flashql",
+    "Histogram",
+    "Telemetry",
+    "percentile",
+    "validate_trace",
 ]

@@ -33,6 +33,7 @@ cost per update instead of O(table).
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Iterable
 
@@ -445,14 +446,20 @@ class BitmapStore:
             self.epoch += 1
         return AppendDelta(rows=b, start_row=n0, pages=tuple(deltas))
 
-    def program_delta(self, array, delta: AppendDelta) -> None:
+    def program_delta(self, array, delta: AppendDelta, telemetry=None) -> None:
         """ESP-program an append's page deltas into ``array``.
 
         New pages are placed into their column's reserved layout region
         (keeping the §6.3 inverted/plain co-location invariants) and
         programmed whole; existing pages get a single delta-page program
         covering only their tail words (``fc_append``).
+
+        ``telemetry`` (a :class:`repro.query.telemetry.Telemetry`, attached
+        by the owning scheduler) records the programming pass as a trace
+        span + page-program histogram when enabled.
         """
+        timed = telemetry is not None and telemetry.enabled
+        t0 = time.perf_counter() if timed else 0.0
         for pd in delta.pages:
             if pd.new:
                 if pd.name not in array.layout:
@@ -462,6 +469,18 @@ class BitmapStore:
                 array.fc_write(pd.name, pd.words, esp=True)
             else:
                 array.fc_append(pd.name, pd.words, start=pd.start)
+        if timed:
+            t1 = time.perf_counter()
+            telemetry.span(
+                "program_delta",
+                "ingest",
+                t0,
+                t1,
+                tid="ingest",
+                args={"pages": delta.num_programs, "rows": delta.rows},
+            )
+            telemetry.observe("append_pages_programmed", delta.num_programs)
+            telemetry.observe("append_program_s", t1 - t0)
 
     # -- program ------------------------------------------------------------
     def place_into(self, layout, warmup: Iterable[Query] = ()) -> None:

@@ -43,6 +43,7 @@ per-flush host preparation.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field, replace
 
 import jax
@@ -186,6 +187,9 @@ class QueryCompiler:
     # schedulers used to keep private exec caches with duplicate pruning
     # logic; centralizing them here keeps one freshness rule
     _execs: dict = field(default_factory=dict, repr=False)
+    # attached by the owning scheduler (repro.query.telemetry.Telemetry):
+    # plan-compile misses report their Planner time as a histogram + span
+    telemetry: object = None
 
     def epoch_sig(self, regions: tuple[str, ...]) -> tuple:
         """Current ``(region, column epoch, device region epoch)`` triple
@@ -246,7 +250,22 @@ class QueryCompiler:
             self.hits += 1
         else:
             self.misses += 1
-            plan = Planner(layout).compile(expr)
+            tele = self.telemetry
+            if tele is not None and tele.enabled:
+                t0 = time.perf_counter()
+                plan = Planner(layout).compile(expr)
+                t1 = time.perf_counter()
+                tele.observe("plan_compile_s", t1 - t0)
+                tele.span(
+                    "plan_compile",
+                    "compile",
+                    t0,
+                    t1,
+                    tid="compile",
+                    args={"key": repr(key[0])},
+                )
+            else:
+                plan = Planner(layout).compile(expr)
             self._plans[key] = plan
         cq = CompiledQuery(query, expr, plan, key, hit)
         if len(self._by_query) >= 4096:  # bound high-cardinality params

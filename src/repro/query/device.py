@@ -328,6 +328,9 @@ class FlashDevice(FlashArray):
     # prepared-batch cache: grouping + device-resident idx uploads per
     # recurring batch composition (see execute_batch_stacked's batch_key)
     _batch_cache: dict = field(default_factory=dict, repr=False)
+    # attached by the owning scheduler (repro.query.telemetry.Telemetry):
+    # counts jitted-runner builds and prepared-batch cache traffic
+    telemetry: object = field(default=None, repr=False)
 
     def __post_init__(self):
         if self.store.planes != self.num_planes:
@@ -409,6 +412,8 @@ class FlashDevice(FlashArray):
         if fn is None:
             fn = make_plan_runner(signature, self.interpret)
             self._runners[signature] = fn
+            if self.telemetry is not None:
+                self.telemetry.count("runner_builds")
         return fn
 
     def _prepare_batch(
@@ -431,7 +436,11 @@ class FlashDevice(FlashArray):
         if batch_key is not None:
             prepared = self._batch_cache.get(batch_key)
             if prepared is not None:
+                if self.telemetry is not None:
+                    self.telemetry.count("batch_cache_hits")
                 return prepared
+            if self.telemetry is not None:
+                self.telemetry.count("batch_cache_misses")
         noisy_slots = {
             self.store.slot(n) for n in self._non_esp if n in self.store
         }

@@ -14,6 +14,15 @@ fall back to the per-group legacy path: vmap batches via
 :class:`FlashDevice.execute_batch`, then one reduce dispatch + one
 transfer per reduce signature (:func:`repro.query.aggregate.reduce_flush`).
 
+Every stat the scheduler keeps lives in one
+:class:`repro.query.telemetry.Telemetry` registry: the legacy counter
+attributes (``host_transfers``, ``wordlines_sensed``, …) are read-only
+views over it, ``stats()`` is reimplemented on top (bit-compatible,
+asserted in tests), and — when telemetry is enabled — every flush records
+its lifecycle (compile -> dispatch -> transfer -> reduce) as trace spans,
+every result carries a sensing + latency attribution, and tickets past a
+latency/sensing threshold land in the slow-query log.
+
 The scheduler also records every executed MWS command's shape
 (:class:`repro.flashsim.workloads.MWSCommandShape`), so ``projection()``
 can replay the served traffic through the paper's full-scale SSD model and
@@ -44,6 +53,11 @@ from repro.query.ast import Count, Mask, Query, normalize_agg
 from repro.query.bitmap import BitmapStore
 from repro.query.compile import QueryCompiler, compile_flush
 from repro.query.device import FlashDevice, age_spill_blocks
+from repro.query.telemetry import (
+    TID_FLUSH,
+    TID_TICKETS,
+    Telemetry,
+)
 
 # one extra sensed plane (a BSI slice / equality bitmap read for an
 # aggregate) = one single-wordline sensing in the SSD projection
@@ -123,6 +137,46 @@ def record_plan_traffic(counter: Counter, plan) -> int:
     return wls
 
 
+def plan_sensings(plan) -> int:
+    """MWS sensing operations a plan performs (memoized via plan_traffic)."""
+    shapes, _ = plan_traffic(plan)
+    return sum(cnt for _, cnt in shapes)
+
+
+def attribute_result(
+    tele: Telemetry,
+    ticket: int,
+    query: Query,
+    attr: dict | None,
+    t_submit: float,
+    t_end: float,
+) -> None:
+    """Shared per-result telemetry: ticket trace span, latency histogram,
+    and the slow-query log.  Called only when telemetry is enabled."""
+    latency = t_end - t_submit
+    tele.observe("query_latency_s", latency)
+    sensings = attr["sensings"] if attr else 0
+    tele.span(
+        "ticket",
+        "query",
+        t_submit,
+        t_end,
+        tid=TID_TICKETS,
+        args={"ticket": ticket, "sensings": sensings},
+    )
+    tele.slow(
+        {
+            "ticket": ticket,
+            "predicate": repr(query.where),
+            "agg": repr(query.agg),
+            "latency_s": latency,
+            "attribution": attr,
+        },
+        latency,
+        sensings,
+    )
+
+
 def project_traffic(
     command_shape_counts: Counter,
     *,
@@ -189,6 +243,11 @@ class QueryResult:
     value: object  # the aggregate's final value (int, float, BitVector, …)
     latency_s: float
     cache_hit: bool
+    # per-query sensing + latency attribution (None when telemetry is
+    # disabled): sensings / wordlines / spill_steps / agg_plane_reads are
+    # exact per query; the *_s phase durations are the enclosing flush's
+    # lifecycle (shared flush work — a batch amortizes it)
+    attribution: dict | None = None
 
     # legacy accessors: COUNT/MASK callers predate the aggregate pipeline
     @property
@@ -200,6 +259,19 @@ class QueryResult:
     def mask(self):
         spec = normalize_agg(self.query.agg)
         return self.value if isinstance(spec, Mask) else None
+
+
+# legacy counter attributes of the schedulers, reimplemented as read-only
+# views over the telemetry registry (one source of truth; stats() stays
+# bit-compatible — asserted in tests/test_query_telemetry.py)
+def registry_counters(cls, names: tuple[str, ...]):
+    for name in names:
+        setattr(
+            cls,
+            name,
+            property(lambda self, _n=name: self.telemetry.value(_n)),
+        )
+    return cls
 
 
 @dataclass
@@ -215,31 +287,17 @@ class BatchScheduler:
     # queue small append() batches and program them as one coalesced delta
     # per touched page on the next flush (or apply_appends())
     coalesce_appends: bool = False
+    # the unified metrics registry + trace recorder; pass
+    # Telemetry(enabled=False) to strip every per-event recorder off the
+    # hot path (counters keep counting — stats()/projection read them)
+    telemetry: Telemetry = None  # type: ignore[assignment]
 
     _pending: list[tuple[int, Query, float]] = field(default_factory=list)
     _next_ticket: int = 0
-    # -- stats --------------------------------------------------------------
-    queries_served: int = 0
-    flushes: int = 0
-    vmap_batches: int = 0
-    eager_plans: int = 0
-    serve_time_s: float = 0.0
-    total_latency_s: float = 0.0
-    # per-flush dispatch/transfer accounting: the fused path costs one
-    # jitted program execution and one device->host payload copy per flush;
-    # the legacy path one transfer per reduce signature
-    fused_dispatches: int = 0
-    host_transfers: int = 0
-    # incremental ingest: appended rows and the delta pages they programmed
-    # (the projection charges exactly these, never a full index reprogram)
-    rows_appended: int = 0
-    esp_delta_programs: int = 0
-    append_batches_coalesced: int = 0
     # executed traffic, aggregated per command shape (bounded memory even
     # for a long-running service); wordlines tracked exactly because ragged
     # commands pad to max_wls_per_block and must not inflate operand counts
     command_shape_counts: Counter = field(default_factory=Counter)
-    wordlines_sensed: int = 0
     _host_postprocess: bool = False
     # stacked extra sensed planes (BSI slices / equality bitmaps) per
     # (store epoch, page tuple) — see repro.query.aggregate.reduce_flush
@@ -254,8 +312,23 @@ class BatchScheduler:
     _append_buf: list = field(default_factory=list, repr=False)
 
     def __post_init__(self):
+        if self.telemetry is None:
+            self.telemetry = Telemetry()
         if self.compiler is None:
             self.compiler = QueryCompiler(self.store, self.device)
+        self.compiler.telemetry = self.telemetry
+        self.device.telemetry = self.telemetry
+        self.telemetry.name_tid(TID_FLUSH, "flush")
+        self.telemetry.name_tid(TID_TICKETS, "tickets")
+        self.telemetry.providers.setdefault("plan_cache", self._plan_cache)
+        self.telemetry.providers.setdefault("projection", self.projection)
+
+    def _plan_cache(self) -> dict:
+        return {
+            "hits": self.compiler.hits,
+            "misses": self.compiler.misses,
+            "size": self.compiler.cache_size,
+        }
 
     # -- incremental ingest --------------------------------------------------
     def append(self, rows: dict[str, object]) -> int:
@@ -284,10 +357,15 @@ class BatchScheduler:
         if self.coalesce_appends:
             queue_append(self.store, self._append_buf, rows)
             return 0
+        return self._program_append(rows)
+
+    def _program_append(self, rows: dict) -> int:
         delta = self.store.append(rows)  # validates before mutating
-        self.store.program_delta(self.device, delta)
-        self.rows_appended += delta.rows
-        self.esp_delta_programs += delta.num_programs
+        self.store.program_delta(
+            self.device, delta, telemetry=self.telemetry
+        )
+        self.telemetry.count("rows_appended", delta.rows)
+        self.telemetry.count("esp_delta_programs", delta.num_programs)
         return delta.num_programs
 
     @property
@@ -306,13 +384,11 @@ class BatchScheduler:
         if not self._append_buf:
             return 0
         rows = merge_appends(self._append_buf)
-        self.append_batches_coalesced += len(self._append_buf)
+        self.telemetry.count(
+            "append_batches_coalesced", len(self._append_buf)
+        )
         self._append_buf.clear()
-        delta = self.store.append(rows)
-        self.store.program_delta(self.device, delta)
-        self.rows_appended += delta.rows
-        self.esp_delta_programs += delta.num_programs
-        return delta.num_programs
+        return self._program_append(rows)
 
     # -- admission ----------------------------------------------------------
     def submit(self, query: Query) -> int:
@@ -339,13 +415,16 @@ class BatchScheduler:
         self.apply_appends()
         if not self._pending:
             return {}
+        tele = self.telemetry
         batch, self._pending = (
             self._pending[: self.max_batch],
             self._pending[self.max_batch :],
         )
+        tele.gauge("pending_after_pop", len(self._pending))
         t0 = time.perf_counter()
         compiled = [self.compiler.compile(q) for _, q, _ in batch]
         execs = [self.compiler.exec_for(cq) for cq in compiled]
+        t_comp = time.perf_counter()
         if self._mask_cache is None or self._mask_cache[0] != self.store.epoch:
             self._mask_cache = (
                 self.store.epoch,
@@ -387,14 +466,18 @@ class BatchScheduler:
                 self._flush_programs[key] = program
             payload = program.run(self.device.store.snapshot(), mask_words)
             age_spill_blocks(self.device.pec, execs)
-            self.fused_dispatches += 1
+            tele.count("fused_dispatches")
             self.device.last_signature_groups = program.n_sense_groups
+            t_disp = time.perf_counter()
             # the single device->host copy of the flush (also the barrier
             # that keeps qps/latency from measuring only Python dispatch)
             host = jax.device_get(payload)
-            self.host_transfers += 1
+            tele.count("host_transfers")
+            t_xfer = time.perf_counter()
             partials = program.unpack(host, aggs)
             extra_counts = list(program.extra_counts)
+            tele.span("dispatch", "flush", t_comp, t_disp)
+            tele.span("transfer", "flush", t_disp, t_xfer)
         else:
             # legacy path (devices with non-ESP pages, and the oracle for
             # the differential harness): vmap batches + one reduce dispatch
@@ -410,6 +493,7 @@ class BatchScheduler:
                 )
                 & mask_words
             )  # (B, W), padding zeroed
+            t_disp = time.perf_counter()
             partials, extra_counts, n_groups = reduce_flush(
                 stacked,
                 [q.agg for q in queries],
@@ -418,38 +502,67 @@ class BatchScheduler:
                 interpret=self.device.interpret,
                 extras_cache=self._extras_cache,
             )
-            self.host_transfers += n_groups
-            self.eager_plans += self.device.last_eager_plans
+            tele.count("host_transfers", n_groups)
+            tele.count("eager_plans", self.device.last_eager_plans)
+            t_xfer = time.perf_counter()
             # force device work before timestamping, or qps/latency would
             # only measure the Python-side dispatch
             jax.block_until_ready(stacked)
+            tele.span("dispatch", "flush", t_comp, t_disp)
+            tele.span("reduce+transfer", "flush", t_disp, t_xfer)
         t1 = time.perf_counter()
         results: dict[int, QueryResult] = {}
         for i, ((ticket, q, t_submit), cq) in enumerate(zip(batch, compiled)):
             agg = aggs[i]
             self._host_postprocess |= agg.host_postprocess
-            results[ticket] = QueryResult(
-                ticket,
-                q,
-                agg.finalize(partials[i], self.store),
-                t1 - t_submit,
-                cq.cache_hit,
-            )
-            self.total_latency_s += t1 - t_submit
-            self.wordlines_sensed += record_plan_traffic(
-                self.command_shape_counts, cq.plan
+            self.telemetry.count(
+                "wordlines_sensed",
+                record_plan_traffic(self.command_shape_counts, cq.plan),
             )
             # each extra plane the aggregate sensed (a BSI slice or an
             # equality bitmap) is one single-wordline read in the
             # projected traffic
             if extra_counts[i]:
                 self.command_shape_counts[AGG_READ_SHAPE] += extra_counts[i]
-                self.wordlines_sensed += extra_counts[i]
+                tele.count("wordlines_sensed", extra_counts[i])
+            attr = None
+            if tele.enabled:
+                attr = {
+                    "sensings": plan_sensings(cq.plan) + extra_counts[i],
+                    "wordlines": plan_traffic(cq.plan)[1] + extra_counts[i],
+                    "spill_steps": execs[i].spills if execs[i] else 0,
+                    "agg_plane_reads": extra_counts[i],
+                    "queue_s": t0 - t_submit,
+                    "compile_s": t_comp - t0,
+                    "device_s": t_disp - t_comp,
+                    "transfer_s": t_xfer - t_disp,
+                    "reduce_s": t1 - t_xfer,
+                }
+                attribute_result(tele, ticket, q, attr, t_submit, t1)
+            results[ticket] = QueryResult(
+                ticket,
+                q,
+                agg.finalize(partials[i], self.store),
+                t1 - t_submit,
+                cq.cache_hit,
+                attribution=attr,
+            )
+            tele.count("total_latency_s", t1 - t_submit)
 
-        self.queries_served += len(batch)
-        self.flushes += 1
-        self.vmap_batches += self.device.last_signature_groups
-        self.serve_time_s += t1 - t0
+        tele.count("queries_served", len(batch))
+        tele.count("flushes")
+        tele.count("vmap_batches", self.device.last_signature_groups)
+        tele.count("serve_time_s", t1 - t0)
+        tele.span("compile", "flush", t0, t_comp)
+        tele.span("reduce", "flush", t_xfer, t1)
+        tele.span(
+            "flush",
+            "flush",
+            t0,
+            t1,
+            args={"flush": int(self.flushes), "batch": len(batch)},
+        )
+        tele.observe("flush_latency_s", t1 - t0)
         return results
 
     def serve(self, queries: list[Query]) -> list[QueryResult]:
@@ -495,11 +608,30 @@ class BatchScheduler:
         """
         return project_traffic(
             self.command_shape_counts,
-            wordlines_sensed=self.wordlines_sensed,
+            wordlines_sensed=int(self.wordlines_sensed),
             num_rows=self.store.num_rows,
-            num_queries=self.queries_served,
+            num_queries=int(self.queries_served),
             host_postprocess=self._host_postprocess,
-            esp_programs=self.esp_delta_programs,
+            esp_programs=int(self.esp_delta_programs),
             ssd=ssd,
-            name=f"flashql({self.queries_served}q)",
+            name=f"flashql({int(self.queries_served)}q)",
         )
+
+
+registry_counters(
+    BatchScheduler,
+    (
+        "queries_served",
+        "flushes",
+        "vmap_batches",
+        "eager_plans",
+        "serve_time_s",
+        "total_latency_s",
+        "fused_dispatches",
+        "host_transfers",
+        "rows_appended",
+        "esp_delta_programs",
+        "append_batches_coalesced",
+        "wordlines_sensed",
+    ),
+)

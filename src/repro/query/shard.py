@@ -93,10 +93,20 @@ from repro.query.device import (
 from repro.query.scheduler import (
     AGG_READ_SHAPE,
     QueryResult,
+    attribute_result,
     merge_appends,
+    plan_sensings,
+    plan_traffic,
     project_traffic,
     queue_append,
     record_plan_traffic,
+    registry_counters,
+)
+from repro.query.telemetry import (
+    TID_FLUSH,
+    TID_MERGE,
+    TID_TICKETS,
+    Telemetry,
 )
 
 POLICIES = ("roundrobin", "range")
@@ -444,6 +454,10 @@ class ShardedFlashQL:
     pipeline: bool = False
     coalesce_appends: bool = False
     compilers: list[QueryCompiler] = field(default_factory=list)
+    # the unified metrics registry + trace recorder shared by the fleet;
+    # pass Telemetry(enabled=False) to strip every per-event recorder off
+    # the hot path (counters keep counting — stats()/projection read them)
+    telemetry: Telemetry = None  # type: ignore[assignment]
 
     _queues: list[list[tuple[int, Query]]] = field(default_factory=list)
     _meta: dict[int, tuple[Query, float]] = field(default_factory=dict)
@@ -471,41 +485,64 @@ class ShardedFlashQL:
     _append_buf: list = field(default_factory=list, repr=False)
 
     # -- stats --------------------------------------------------------------
-    queries_served: int = 0
-    flushes: int = 0
-    signature_groups: int = 0  # vmap groups dispatched (post-padding)
-    distinct_signatures: int = 0  # exact signatures seen (pre-padding)
-    eager_plans: int = 0
-    fused_flushes: int = 0
-    pipelined_flushes: int = 0
-    fused_dispatches: int = 0  # fused flush programs executed
-    host_transfers: int = 0  # device->host result copies
-    shards_pruned: int = 0  # stripe-routing prunes (shard never sensed)
-    serve_time_s: float = 0.0
-    total_latency_s: float = 0.0
+    # counter attributes (queries_served, flushes, host_transfers, …) are
+    # registry-backed properties — see registry_counters() below the class.
+    # Projected-traffic shape counts stay real fields (Counter-valued).
     shard_traffic: list[Counter] = field(default_factory=list)
-    shard_wordlines: list[int] = field(default_factory=list)
-    # incremental ingest: appended rows and per-shard delta page programs
-    rows_appended: int = 0
-    esp_delta_programs: int = 0
-    append_batches_coalesced: int = 0
-    shard_esp_programs: list[int] = field(default_factory=list)
+    # per-ticket attribution under accumulation (telemetry enabled only;
+    # popped with the ticket in _collect_done, so in-flight size is
+    # bounded by in-flight tickets)
+    _attr: dict[int, dict] = field(default_factory=dict, repr=False)
     _host_postprocess: bool = False
 
     def __post_init__(self):
         if len(self.devices) != self.store.num_shards:
             raise ValueError("one device per shard required")
+        if self.telemetry is None:
+            self.telemetry = Telemetry()
         if not self.compilers:
             self.compilers = [
                 QueryCompiler(st, dev)
                 for st, dev in zip(self.store.shards, self.devices)
             ]
+        for comp, dev in zip(self.compilers, self.devices):
+            comp.telemetry = self.telemetry
+            dev.telemetry = self.telemetry
+        for s in range(self.store.num_shards):
+            self.telemetry.name_tid(s, f"shard {s}")
+        self.telemetry.name_tid(TID_MERGE, "merge")
+        self.telemetry.name_tid(TID_FLUSH, "flush")
+        self.telemetry.name_tid(TID_TICKETS, "tickets")
+        self.telemetry.providers.setdefault("plan_cache", self._plan_cache)
+        self.telemetry.providers.setdefault("projection", self.projection)
         self._queues = [[] for _ in range(self.store.num_shards)]
         self.shard_traffic = [
             Counter() for _ in range(self.store.num_shards)
         ]
-        self.shard_wordlines = [0] * self.store.num_shards
-        self.shard_esp_programs = [0] * self.store.num_shards
+
+    def _plan_cache(self) -> dict:
+        return {
+            "hits": sum(c.hits for c in self.compilers),
+            "misses": sum(c.misses for c in self.compilers),
+            "size": sum(c.cache_size for c in self.compilers),
+        }
+
+    # per-shard counter mirrors ("shard{s}.wordlines_sensed", …) live in
+    # the registry next to the fleet totals; the legacy list attributes
+    # read them out (conservation asserted in tests/test_query_telemetry)
+    @property
+    def shard_wordlines(self) -> list[int]:
+        return [
+            int(self.telemetry.value(f"shard{s}.wordlines_sensed"))
+            for s in range(self.store.num_shards)
+        ]
+
+    @property
+    def shard_esp_programs(self) -> list[int]:
+        return [
+            int(self.telemetry.value(f"shard{s}.esp_programs"))
+            for s in range(self.store.num_shards)
+        ]
 
     # -- incremental ingest --------------------------------------------------
     def append(self, rows: dict[str, np.ndarray]) -> int:
@@ -539,13 +576,16 @@ class ShardedFlashQL:
 
     def _program_append(self, rows: dict[str, np.ndarray]) -> int:
         deltas = self.store.append(rows)  # validates before mutating
+        tele = self.telemetry
         pages = 0
         for s, delta in deltas.items():
-            self.store.shards[s].program_delta(self.devices[s], delta)
-            self.shard_esp_programs[s] += delta.num_programs
+            self.store.shards[s].program_delta(
+                self.devices[s], delta, telemetry=tele
+            )
+            tele.count(f"shard{s}.esp_programs", delta.num_programs)
             pages += delta.num_programs
-            self.rows_appended += delta.rows
-        self.esp_delta_programs += pages
+            tele.count("rows_appended", delta.rows)
+        tele.count("esp_delta_programs", pages)
         # row counts moved: host-side valid-row masks and their
         # device-resident stacks are stale (the fleet snapshot stack and
         # extras caches invalidate through the stores' content epochs)
@@ -566,7 +606,9 @@ class ShardedFlashQL:
         if not self._append_buf:
             return 0
         rows = merge_appends(self._append_buf)
-        self.append_batches_coalesced += len(self._append_buf)
+        self.telemetry.count(
+            "append_batches_coalesced", len(self._append_buf)
+        )
         self._append_buf.clear()
         return self._program_append(rows)
 
@@ -606,7 +648,7 @@ class ShardedFlashQL:
                 self._partials[ticket][s] = agg.empty_partial(
                     self.store.shards[s]
                 )
-                self.shards_pruned += 1
+                self.telemetry.count("shards_pruned")
             else:
                 self._queues[s].append((ticket, query))
         return ticket
@@ -675,23 +717,65 @@ class ShardedFlashQL:
 
     def _pop_batch(self, s: int, depth: int):
         """Pop up to ``depth`` queries from shard ``s``'s queue, compiled
-        through its plan/exec caches; records plan traffic."""
+        through its plan/exec caches; records plan traffic (fleet total +
+        the ``shard{s}.*`` registry mirror) and, when telemetry is
+        enabled, accumulates per-ticket sensing attribution."""
+        tele = self.telemetry
         batch, self._queues[s] = (
             self._queues[s][:depth],
             self._queues[s][depth:],
         )
+        t_pop = time.perf_counter() if tele.enabled else 0.0
         out = []
         for ticket, q in batch:
             cq = self.compilers[s].compile(q)
             self._cache_hits[ticket] &= cq.cache_hit
-            out.append((ticket, q, cq, self.compilers[s].exec_for(cq)))
-            self.shard_wordlines[s] += record_plan_traffic(
-                self.shard_traffic[s], cq.plan
+            e = self.compilers[s].exec_for(cq)
+            out.append((ticket, q, cq, e))
+            tele.count(
+                f"shard{s}.wordlines_sensed",
+                record_plan_traffic(self.shard_traffic[s], cq.plan),
             )
+            if tele.enabled:
+                attr = self._attr.get(ticket)
+                if attr is None:
+                    attr = self._attr[ticket] = {
+                        "sensings": 0,
+                        "wordlines": 0,
+                        "spill_steps": 0,
+                        "agg_plane_reads": 0,
+                        "shards": 0,
+                        "queue_s": t_pop - self._meta[ticket][1],
+                        "compile_s": 0.0,
+                        "device_s": 0.0,
+                        "transfer_s": 0.0,
+                        "merge_s": 0.0,
+                    }
+                attr["sensings"] += plan_sensings(cq.plan)
+                attr["wordlines"] += plan_traffic(cq.plan)[1]
+                attr["spill_steps"] += e.spills if e is not None else 0
+                attr["shards"] += 1
+        tele.gauge(f"shard{s}.queue_depth", len(self._queues[s]))
         return out
 
+    def _attr_phase(self, compiled, phase: str, dt: float) -> None:
+        """Charge one shard-batch phase duration to every member ticket's
+        attribution (telemetry enabled only).  Phase durations are
+        shard-batch granular: a ticket's ``compile_s``/``device_s``/…
+        sums the phases of every shard batch that served it — shared
+        batch work, so members of one batch each report the full phase."""
+        for ticket, _, _, _ in compiled:
+            attr = self._attr.get(ticket)
+            if attr is not None:
+                attr[phase] += dt
+
     def _collect_done(self, t1: float) -> dict[int, QueryResult]:
-        """Gather every ticket whose partials cover all active shards."""
+        """Gather every ticket whose partials cover all active shards.
+
+        Pops every per-ticket record (_meta / _partials / _cache_hits /
+        _attr) as the ticket completes — long-running serving keeps only
+        in-flight tickets in memory (asserted in tests)."""
+        tele = self.telemetry
         expected = len(self.store.active)
         results: dict[int, QueryResult] = {}
         done = [
@@ -704,15 +788,26 @@ class ShardedFlashQL:
             parts = self._partials.pop(ticket)
             agg = get_aggregator(q.agg)
             self._host_postprocess |= agg.host_postprocess
+            attr = self._attr.pop(ticket, None)
             results[ticket] = QueryResult(
                 ticket,
                 q,
                 agg.merge(parts, self.store),
                 t1 - t_submit,
                 cache_hit=self._cache_hits.pop(ticket),
+                attribution=attr,
             )
-            self.total_latency_s += t1 - t_submit
-        self.queries_served += len(done)
+            tele.count("total_latency_s", t1 - t_submit)
+            if tele.enabled:
+                attribute_result(tele, ticket, q, attr, t_submit, t1)
+        tele.count("queries_served", len(done))
+        if done and tele.enabled:
+            t_m1 = time.perf_counter()
+            tele.span("merge", "flush", t1, t_m1, tid=TID_MERGE)
+            for ticket in done:
+                a = results[ticket].attribution
+                if a is not None:
+                    a["merge_s"] = t_m1 - t1
         return results
 
     # -- pipelined (asynchronous per-shard) flushing -------------------------
@@ -769,6 +864,8 @@ class ShardedFlashQL:
         device holds non-ESP pages run the synchronous per-group legacy
         path instead (their reads may inject errors) and return None.
         """
+        tele = self.telemetry
+        t_d0 = time.perf_counter()
         compiled = self._pop_batch(s, depth)
         if not compiled:
             return None
@@ -776,9 +873,11 @@ class ShardedFlashQL:
         st = self.store.shards[s]
         aggs = [get_aggregator(q.agg) for _, q, _, _ in compiled]
         execs = [e for _, _, _, e in compiled]
-        self.distinct_signatures += len(
-            {e.signature for e in execs if e is not None}
+        tele.count(
+            "distinct_signatures",
+            len({e.signature for e in execs if e is not None}),
         )
+        t_d1 = time.perf_counter()
         if dev._non_esp:
             # legacy sync path: error-injecting eager guard + per-group
             # reduce transfers
@@ -787,8 +886,8 @@ class ShardedFlashQL:
                 execs=execs,
                 batch_key=tuple((s, cq.key) for _, _, cq, _ in compiled),
             ) & self._mask_row(s)
-            self.signature_groups += dev.last_signature_groups
-            self.eager_plans += dev.last_eager_plans
+            tele.count("signature_groups", dev.last_signature_groups)
+            tele.count("eager_plans", dev.last_eager_plans)
             partials, extra_counts, n_groups = reduce_flush(
                 masked,
                 [q.agg for _, q, _, _ in compiled],
@@ -797,8 +896,15 @@ class ShardedFlashQL:
                 interpret=dev.interpret,
                 extras_cache=self._extras_cache,
             )
-            self.host_transfers += n_groups
+            tele.count("host_transfers", n_groups)
+            tele.count(f"shard{s}.host_transfers", n_groups)
             self._record_partials(s, compiled, partials, extra_counts)
+            if tele.enabled:
+                t_d2 = time.perf_counter()
+                tele.span("compile", "shard", t_d0, t_d1, tid=s)
+                tele.span("execute+reduce", "shard", t_d1, t_d2, tid=s)
+                self._attr_phase(compiled, "compile_s", t_d1 - t_d0)
+                self._attr_phase(compiled, "device_s", t_d2 - t_d1)
             return None
         # plan keys cover only the predicate side; the aggregate specs
         # join the key so same-predicate flushes under different
@@ -826,25 +932,48 @@ class ShardedFlashQL:
                 pad=dev.pad_signatures,
             )
             self._flush_programs[key] = program
+        t_d2 = time.perf_counter()
         payload = program.run(dev.store.snapshot(), self._mask_row(s))
         age_spill_blocks(dev.pec, execs)
-        self.fused_dispatches += 1
-        self.signature_groups += program.n_sense_groups
+        tele.count("fused_dispatches")
+        tele.count(f"shard{s}.fused_dispatches")
+        tele.count("signature_groups", program.n_sense_groups)
+        if tele.enabled:
+            t_d3 = time.perf_counter()
+            tele.span("compile", "shard", t_d0, t_d2, tid=s)
+            tele.span("dispatch", "shard", t_d2, t_d3, tid=s)
+            self._attr_phase(compiled, "compile_s", t_d2 - t_d0)
+            self._attr_phase(compiled, "device_s", t_d3 - t_d2)
         return (s, compiled, program, payload, aggs)
 
     def _record_partials(self, s, compiled, partials, extra_counts):
+        tele = self.telemetry
         for i, (ticket, _, _, _) in enumerate(compiled):
             self._partials[ticket][s] = partials[i]
             if extra_counts[i]:
                 self.shard_traffic[s][AGG_READ_SHAPE] += extra_counts[i]
-                self.shard_wordlines[s] += extra_counts[i]
+                tele.count(
+                    f"shard{s}.wordlines_sensed", extra_counts[i]
+                )
+                attr = self._attr.get(ticket)
+                if attr is not None:
+                    attr["sensings"] += extra_counts[i]
+                    attr["wordlines"] += extra_counts[i]
+                    attr["agg_plane_reads"] += extra_counts[i]
 
     def _gather_shard(self, inflight) -> None:
         """Transfer one in-flight shard payload (the only blocking point)
         and record its partials."""
+        tele = self.telemetry
         s, compiled, program, payload, aggs = inflight
+        t_g0 = time.perf_counter() if tele.enabled else 0.0
         host = jax.device_get(payload)
-        self.host_transfers += 1
+        tele.count("host_transfers")
+        tele.count(f"shard{s}.host_transfers")
+        if tele.enabled:
+            t_g1 = time.perf_counter()
+            tele.span("transfer", "shard", t_g0, t_g1, tid=s)
+            self._attr_phase(compiled, "transfer_s", t_g1 - t_g0)
         partials = program.unpack(host, aggs)
         self._record_partials(s, compiled, partials, program.extra_counts)
 
@@ -855,8 +984,12 @@ class ShardedFlashQL:
             len(p) == expected for p in self._partials.values()
         ):
             return {}
+        tele = self.telemetry
         t0 = time.perf_counter()
         depths = self._routed_depths(active)
+        if tele.enabled:
+            for s, d in depths.items():
+                tele.gauge(f"shard{s}.routed_depth", d)
         inflight: deque = deque()
         for s in active:
             entry = self._dispatch_shard(s, depths[s])
@@ -872,9 +1005,17 @@ class ShardedFlashQL:
             self._gather_shard(inflight.popleft())
         t1 = time.perf_counter()
         results = self._collect_done(t1)
-        self.flushes += 1
-        self.pipelined_flushes += 1
-        self.serve_time_s += t1 - t0
+        tele.count("flushes")
+        tele.count("pipelined_flushes")
+        tele.count("serve_time_s", t1 - t0)
+        tele.span(
+            "flush",
+            "flush",
+            t0,
+            t1,
+            args={"flush": int(self.flushes), "shards": len(active)},
+        )
+        tele.observe("flush_latency_s", t1 - t0)
         return results
 
     # -- lockstep (cross-shard fused) flushing -------------------------------
@@ -885,17 +1026,22 @@ class ShardedFlashQL:
             len(p) == expected for p in self._partials.values()
         ):
             return {}
+        tele = self.telemetry
         t0 = time.perf_counter()
 
         # scatter: pop per-shard batches and compile through per-shard caches
         items: list[tuple[int, int, object]] = []  # (shard, ticket, exec|None)
         plans: list = []  # parallel to items
         keys: list[tuple] = []  # (shard, plan-cache key) per item
+        popped: list = []  # the _pop_batch tuples, for phase attribution
         for s in active:
-            for ticket, q, cq, e in self._pop_batch(s, self.queue_depth):
+            for entry in self._pop_batch(s, self.queue_depth):
+                ticket, q, cq, e = entry
                 items.append((s, ticket, e))
                 plans.append(cq.plan)
                 keys.append((s, cq.key))
+                popped.append(entry)
+        t_sc = time.perf_counter()
 
         if items:
             # execute: fused cross-shard vmap groups where snapshots stack.
@@ -903,8 +1049,9 @@ class ShardedFlashQL:
             # per-item jax slicing would cost O(shards x batch) dispatches
             # and dominate serving time at realistic batch sizes.
             execs = [e for _, _, e in items]
-            self.distinct_signatures += len(
-                {e.signature for e in execs if e is not None}
+            tele.count(
+                "distinct_signatures",
+                len({e.signature for e in execs if e is not None}),
             )
             fleet_w = self.store.shards[active[0]].words
             pieces: list[jax.Array] = []  # (B_g, fleet_w) per group
@@ -937,7 +1084,7 @@ class ShardedFlashQL:
                     if len(self._group_cache) >= 64:
                         self._group_cache.clear()
                     self._group_cache[cache_key] = prepared
-                self.signature_groups += len(prepared)
+                tele.count("signature_groups", len(prepared))
                 for signature, fleet_ix, idxs, members in prepared:
                     out = self._sharded_runner(signature)(
                         data, fleet_ix, *idxs
@@ -946,7 +1093,7 @@ class ShardedFlashQL:
                     order.extend(members)
                 for s, _, e in items:
                     age_spill_blocks(self.devices[s].pec, (e,))
-                self.fused_flushes += 1
+                tele.count("fused_flushes")
             else:
                 # per-device fallback: each shard runs its own vmap batches
                 for s in active:
@@ -959,10 +1106,13 @@ class ShardedFlashQL:
                         )
                     )
                     order.extend(ix)
-                    self.signature_groups += self.devices[
-                        s
-                    ].last_signature_groups
-                    self.eager_plans += self.devices[s].last_eager_plans
+                    tele.count(
+                        "signature_groups",
+                        self.devices[s].last_signature_groups,
+                    )
+                    tele.count(
+                        "eager_plans", self.devices[s].last_eager_plans
+                    )
             allout = reorder_rows(pieces, order)
 
             # reduce: mask shard partials (identity pad rows, word slack,
@@ -984,7 +1134,7 @@ class ShardedFlashQL:
                 interpret=self.devices[0].interpret,
                 extras_cache=self._extras_cache,
             )
-            self.host_transfers += n_groups
+            tele.count("host_transfers", n_groups)
             jax.block_until_ready(masked)
 
             for i, (s, ticket, _) in enumerate(items):
@@ -994,12 +1144,32 @@ class ShardedFlashQL:
                 # the projected traffic
                 if extra_counts[i]:
                     self.shard_traffic[s][AGG_READ_SHAPE] += extra_counts[i]
-                    self.shard_wordlines[s] += extra_counts[i]
+                    tele.count(
+                        f"shard{s}.wordlines_sensed", extra_counts[i]
+                    )
+                    attr = self._attr.get(ticket)
+                    if attr is not None:
+                        attr["sensings"] += extra_counts[i]
+                        attr["wordlines"] += extra_counts[i]
+                        attr["agg_plane_reads"] += extra_counts[i]
 
         t1 = time.perf_counter()
+        if tele.enabled and items:
+            tele.span("compile", "flush", t0, t_sc)
+            tele.span("execute+reduce", "flush", t_sc, t1)
+            self._attr_phase(popped, "compile_s", t_sc - t0)
+            self._attr_phase(popped, "device_s", t1 - t_sc)
         results = self._collect_done(t1)
-        self.flushes += 1
-        self.serve_time_s += t1 - t0
+        tele.count("flushes")
+        tele.count("serve_time_s", t1 - t0)
+        tele.span(
+            "flush",
+            "flush",
+            t0,
+            t1,
+            args={"flush": int(self.flushes), "shards": len(active)},
+        )
+        tele.observe("flush_latency_s", t1 - t0)
         return results
 
     def _mask_matrix(self, shard_seq: tuple[int, ...]) -> jax.Array:
@@ -1109,6 +1279,28 @@ class ShardedFlashQL:
             "energy_ratio_vs_osp": osp_e / fc_e,
             "per_shard": per_shard,
         }
+
+
+registry_counters(
+    ShardedFlashQL,
+    (
+        "queries_served",
+        "flushes",
+        "signature_groups",  # vmap groups dispatched (post-padding)
+        "distinct_signatures",  # exact signatures seen (pre-padding)
+        "eager_plans",
+        "fused_flushes",
+        "pipelined_flushes",
+        "fused_dispatches",  # fused flush programs executed
+        "host_transfers",  # device->host result copies
+        "shards_pruned",  # stripe-routing prunes (shard never sensed)
+        "serve_time_s",
+        "total_latency_s",
+        "rows_appended",
+        "esp_delta_programs",
+        "append_batches_coalesced",
+    ),
+)
 
 
 def build_sharded_flashql(

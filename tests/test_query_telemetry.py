@@ -1,0 +1,467 @@
+"""Telemetry contract: unified registry, conservation invariants, bounded
+memory, trace export/nesting, attribution, and the disabled no-op path.
+
+The load-bearing guarantees:
+
+* both schedulers' ``stats()`` are thin views over the telemetry counter
+  registry — every counter key in ``stats()`` matches the registry value
+  exactly (the bit-compat contract of the migration);
+* counter conservation: the fused path spends exactly 1 host transfer and
+  <= 1 fused dispatch per flush signature (cross-checked against real
+  ``jax.device_get`` calls), and fleet totals equal the sum of the
+  per-shard ``shard{j}.*`` mirror counters;
+* ``Telemetry(enabled=False)`` changes NO query result (differential
+  fleet) and records no spans/histograms/attribution, while counters —
+  ``stats()``/projection inputs — keep counting;
+* long-running serving keeps bounded memory: per-ticket records are
+  popped as tickets complete, and every telemetry buffer is a ring;
+* the exported Chrome trace parses, spans nest laminarly per row, and
+  overlapping ticket lifetimes export as async pairs.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.query import (
+    BatchScheduler,
+    BitmapStore,
+    Count,
+    Eq,
+    FlashDevice,
+    Histogram,
+    In,
+    Query,
+    Range,
+    Sum,
+    Telemetry,
+    build_sharded_flashql,
+    percentile,
+    validate_trace,
+)
+from repro.query.ast import and_ as qand
+
+
+def _table(rng, n):
+    return {
+        "country": rng.integers(0, 6, n),
+        "device": rng.integers(0, 4, n),
+        "sales": rng.integers(0, 500, n),
+    }
+
+
+def _scheduler(table, planes=2, **kw):
+    store = BitmapStore()
+    store.ingest(table)
+    dev = FlashDevice(num_planes=planes)
+    store.program(dev)
+    return BatchScheduler(dev, store, **kw)
+
+
+def _queries():
+    return [
+        Query(Eq("country", 1)),
+        Query(qand(Eq("country", 2), Eq("device", 1)), agg=Sum("sales")),
+        Query(In("device", [0, 2]), agg=Count()),
+        Query(Range("sales", 13, 437)),  # deep range: spills
+    ]
+
+
+class _TransferCounter:
+    """Counts real ``jax.device_get`` calls after construction."""
+
+    def __init__(self, monkeypatch):
+        self.calls = 0
+        real = jax.device_get
+
+        def counted(x):
+            self.calls += 1
+            return real(x)
+
+        monkeypatch.setattr(jax, "device_get", counted)
+
+
+# ---------------------------------------------------------------------------
+# percentile / histogram: the single quantile codepath
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    assert percentile([1, 2, 3, 4, 5], 50) == 3
+    assert percentile([1, 2, 3, 4, 5], 95) == 5
+    assert percentile([5, 1, 3], 0) == 1
+    assert percentile([7], 99) == 7
+    with pytest.raises(ValueError):
+        percentile([], 50)
+
+
+def test_harness_percentile_is_the_telemetry_one():
+    import importlib.util
+    import pathlib
+
+    spec = importlib.util.spec_from_file_location(
+        "_harness",
+        pathlib.Path(__file__).parent.parent / "benchmarks" / "_harness.py",
+    )
+    harness = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(harness)
+    assert harness.percentile is percentile
+    s = harness.latency_summary([0.4, 0.1, 0.3, 0.2])
+    assert s == {"p50": 0.2, "p95": 0.4, "mean": 0.25, "n": 4}
+
+
+def test_histogram_ring_is_bounded():
+    h = Histogram(capacity=4)
+    for v in range(100):
+        h.observe(float(v))
+    assert len(h.samples) == 4
+    s = h.summary()
+    assert s["count"] == 100  # count/mean cover everything ever observed
+    assert s["mean"] == pytest.approx(sum(range(100)) / 100)
+    assert s["p50"] == 97.0  # quantiles cover the retained ring
+    assert s["max"] == 99.0
+    assert Histogram().summary() == {"count": 0}
+
+
+# ---------------------------------------------------------------------------
+# stats() is a thin view over the registry (bit-compat)
+# ---------------------------------------------------------------------------
+
+
+def test_batch_scheduler_stats_mirror_registry():
+    rng = np.random.default_rng(0)
+    table = _table(rng, 600)
+    sched = _scheduler(table, max_batch=3)
+    sched.serve(_queries())
+    s = sched.stats()
+    c = sched.telemetry.snapshot()["counters"]
+    for key in (
+        "queries_served",
+        "flushes",
+        "vmap_batches",
+        "fused_dispatches",
+        "host_transfers",
+        "rows_appended",
+        "esp_delta_programs",
+        "append_batches_coalesced",
+    ):
+        assert s[key] == c.get(key, 0), key
+    assert s["queries_served"] == 4
+    assert s["plan_cache_hits"] == sched.compiler.hits
+    assert s["plan_cache_misses"] == sched.compiler.misses
+    assert s["mean_latency_s"] == pytest.approx(
+        c["total_latency_s"] / s["queries_served"]
+    )
+    assert s["queries_per_sec"] == pytest.approx(
+        s["queries_served"] / c["serve_time_s"]
+    )
+    # snapshot provider sections: plan cache + projection read out together
+    snap = sched.telemetry.snapshot()
+    assert snap["plan_cache"]["hits"] == sched.compiler.hits
+    assert snap["projection"]["fc_time_s"] > 0
+
+
+def test_sharded_stats_mirror_registry():
+    rng = np.random.default_rng(1)
+    table = _table(rng, 400)
+    sq = build_sharded_flashql(table, 3, queue_depth=4, pipeline=True)
+    sq.serve(_queries())
+    s = sq.stats()
+    c = sq.telemetry.snapshot()["counters"]
+    for key in (
+        "queries_served",
+        "flushes",
+        "pipelined_flushes",
+        "fused_dispatches",
+        "host_transfers",
+        "shards_pruned",
+        "distinct_signatures",
+    ):
+        assert s[key] == c.get(key, 0), key
+    assert s["vmap_batches"] == c.get("signature_groups", 0)
+    assert s["plan_cache_hits"] == sum(x.hits for x in sq.compilers)
+    snap = sq.telemetry.snapshot()
+    assert snap["plan_cache"]["misses"] == sum(
+        x.misses for x in sq.compilers
+    )
+    assert snap["projection"]["num_devices"] == 3
+
+
+# ---------------------------------------------------------------------------
+# counter conservation
+# ---------------------------------------------------------------------------
+
+
+def test_fused_flush_counters_match_real_transfers(monkeypatch):
+    """Registry counters must agree with actual device_get traffic: one
+    transfer and one fused dispatch per flush signature."""
+    rng = np.random.default_rng(2)
+    table = _table(rng, 500)
+    sched = _scheduler(table)
+    queries = _queries()
+    for q in queries:
+        sched.submit(q)
+    counter = _TransferCounter(monkeypatch)
+    sched.flush()
+    assert counter.calls == 1
+    assert sched.host_transfers == 1
+    assert sched.fused_dispatches == 1
+    # recurring composition: same flush signature, still 1 transfer each
+    for q in queries:
+        sched.submit(q)
+    sched.flush()
+    assert counter.calls == 2
+    assert sched.host_transfers == 2
+    assert sched.fused_dispatches == 2
+    assert len(sched._flush_programs) == 1  # one program, re-dispatched
+
+
+def test_sharded_totals_equal_per_shard_sums(monkeypatch):
+    rng = np.random.default_rng(3)
+    table = _table(rng, 600)
+    sq = build_sharded_flashql(table, 4, queue_depth=8, pipeline=True)
+    counter = _TransferCounter(monkeypatch)
+    sq.serve(_queries())
+    c = sq.telemetry.snapshot()["counters"]
+    n = sq.store.num_shards
+    for total, shard_key in (
+        ("host_transfers", "host_transfers"),
+        ("fused_dispatches", "fused_dispatches"),
+        ("esp_delta_programs", "esp_programs"),
+    ):
+        assert c.get(total, 0) == sum(
+            c.get(f"shard{s}.{shard_key}", 0) for s in range(n)
+        ), total
+    assert c["host_transfers"] == counter.calls
+    # the legacy list attributes read the same per-shard mirrors
+    assert sq.shard_wordlines == [
+        int(c.get(f"shard{s}.wordlines_sensed", 0)) for s in range(n)
+    ]
+    assert sum(sq.shard_wordlines) > 0
+
+
+# ---------------------------------------------------------------------------
+# disabled telemetry: no-op recorders, identical results
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_telemetry_changes_no_result():
+    rng = np.random.default_rng(4)
+    table = _table(rng, 500)
+    queries = _queries()
+    on = build_sharded_flashql(table, 3, queue_depth=4, pipeline=True)
+    off = build_sharded_flashql(table, 3, queue_depth=4, pipeline=True)
+    off.telemetry.enabled = False
+    res_on = on.serve(queries)
+    res_off = off.serve(queries)
+    for a, b in zip(res_on, res_off):
+        if hasattr(a.value, "words"):
+            np.testing.assert_array_equal(
+                np.asarray(a.value.words), np.asarray(b.value.words)
+            )
+        else:
+            assert a.value == b.value
+        assert a.attribution is not None
+        assert b.attribution is None
+    # same on the unsharded scheduler, against its own disabled twin
+    s_on = _scheduler(table)
+    s_off = _scheduler(table, telemetry=Telemetry(enabled=False))
+    for a, b in zip(s_on.serve(queries), s_off.serve(queries)):
+        if hasattr(a.value, "words"):
+            np.testing.assert_array_equal(
+                np.asarray(a.value.words), np.asarray(b.value.words)
+            )
+        else:
+            assert a.value == b.value
+    # disabled: no per-event machinery ran, but counters kept counting
+    snap = off.telemetry.snapshot()
+    assert snap["enabled"] is False
+    assert snap["histograms"] == {}
+    assert snap["trace_events"] == 0
+    assert snap["slow_queries"] == []
+    assert snap["counters"]["queries_served"] == len(queries)
+    assert off.stats()["host_transfers"] == on.stats()["host_transfers"]
+    assert snap["projection"]["fc_time_s"] > 0  # projection still works
+
+
+# ---------------------------------------------------------------------------
+# bounded memory over long-running serving
+# ---------------------------------------------------------------------------
+
+
+def test_long_running_serving_keeps_bounded_state():
+    rng = np.random.default_rng(5)
+    table = _table(rng, 300)
+    sq = build_sharded_flashql(table, 2, queue_depth=2, pipeline=True)
+    sq.telemetry = type(sq.telemetry)(
+        trace_capacity=16, hist_capacity=8, slow_capacity=4,
+        slow_latency_s=0.0,
+    )
+    sq.__post_init__()  # rewire the smaller registry through the stack
+    queries = _queries()
+    for _ in range(12):  # 12 serve cycles, multiple flushes each
+        sq.serve(queries)
+    # per-ticket records are popped as tickets complete
+    assert sq._meta == {}
+    assert sq._partials == {}
+    assert sq._cache_hits == {}
+    assert sq._attr == {}
+    # every telemetry buffer is a ring at its configured capacity
+    tele = sq.telemetry
+    assert len(tele.trace) <= 16
+    assert len(tele.slow_queries) <= 4
+    assert all(len(h.samples) <= 8 for h in tele.hists.values())
+    assert tele.hists["query_latency_s"].count == 12 * len(queries)
+
+
+def test_unsharded_pending_drains():
+    rng = np.random.default_rng(6)
+    table = _table(rng, 300)
+    sched = _scheduler(table, max_batch=2)
+    for _ in range(6):
+        sched.serve(_queries())
+    assert sched._pending == []
+    assert sched.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# trace export + nesting
+# ---------------------------------------------------------------------------
+
+
+def test_trace_export_parses_and_nests(tmp_path):
+    rng = np.random.default_rng(7)
+    table = _table(rng, 500)
+    sq = build_sharded_flashql(table, 4, queue_depth=4, pipeline=True)
+    sq.serve(_queries())
+    sq.serve(_queries())
+    path = tmp_path / "trace.json"
+    sq.telemetry.export_trace(str(path))
+    trace = json.loads(path.read_text())
+    n = validate_trace(trace)
+    assert n > 0
+    names = {e["name"] for e in trace["traceEvents"]}
+    # the flush lifecycle is visible: per-shard compile/dispatch/transfer
+    # rows, the merge row, the enclosing flush spans, and ticket asyncs
+    for expected in ("flush", "compile", "dispatch", "transfer", "merge",
+                     "ticket"):
+        assert expected in names, expected
+    rows = {
+        e["args"]["name"]
+        for e in trace["traceEvents"]
+        if e["ph"] == "M" and e["name"] == "thread_name"
+    }
+    assert {"shard 0", "shard 3", "merge", "flush", "tickets"} <= rows
+    # ticket lifetimes export as async pairs (they legitimately overlap)
+    assert any(e["ph"] == "b" for e in trace["traceEvents"])
+
+
+def test_batch_scheduler_trace_nests():
+    rng = np.random.default_rng(8)
+    table = _table(rng, 400)
+    sched = _scheduler(table, max_batch=2)
+    sched.serve(_queries())
+    trace = sched.telemetry.export_trace()
+    assert validate_trace(trace) > 0
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert {"flush", "compile", "dispatch", "transfer", "reduce"} <= names
+
+
+def test_validate_trace_rejects_partial_overlap():
+    bad = {
+        "traceEvents": [
+            {"name": "a", "ph": "X", "pid": 0, "tid": 0, "ts": 0.0,
+             "dur": 10.0},
+            {"name": "b", "ph": "X", "pid": 0, "tid": 0, "ts": 5.0,
+             "dur": 10.0},
+        ]
+    }
+    with pytest.raises(ValueError, match="overlaps"):
+        validate_trace(bad)
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_trace({})
+    # same spans on DIFFERENT rows are fine — that overlap is pipelining
+    ok = {
+        "traceEvents": [
+            {"name": "a", "ph": "X", "pid": 0, "tid": 0, "ts": 0.0,
+             "dur": 10.0},
+            {"name": "b", "ph": "X", "pid": 0, "tid": 1, "ts": 5.0,
+             "dur": 10.0},
+        ]
+    }
+    assert validate_trace(ok) == 2
+
+
+# ---------------------------------------------------------------------------
+# attribution + slow-query log
+# ---------------------------------------------------------------------------
+
+
+def test_attribution_contents_unsharded():
+    rng = np.random.default_rng(9)
+    table = _table(rng, 500)
+    sched = _scheduler(table)
+    results = sched.serve(_queries())
+    for r in results:
+        a = r.attribution
+        assert a["sensings"] >= 1
+        assert a["wordlines"] >= 1
+        for phase in ("queue_s", "compile_s", "device_s", "transfer_s",
+                      "reduce_s"):
+            assert a[phase] >= 0.0
+    # the deep range spills; the equality queries don't
+    spill = results[3].attribution
+    assert spill["spill_steps"] > 0
+    assert results[0].attribution["spill_steps"] == 0
+    # a SUM senses extra BSI planes, attributed as aggregate slice reads
+    assert results[1].attribution["agg_plane_reads"] > 0
+    assert results[0].attribution["agg_plane_reads"] == 0
+
+
+def test_attribution_counts_serving_shards():
+    rng = np.random.default_rng(10)
+    n = 300
+    table = {
+        "k": np.arange(n),
+        "v": rng.integers(0, 4, n),
+    }
+    sq = build_sharded_flashql(
+        table, 3, policy="range", stripe_key="k", queue_depth=8,
+        pipeline=True,
+    )
+    # key-range query routes to one stripe; the broad one hits all three
+    res = sq.serve([
+        Query(Range("k", 0, 10), agg=Count()),
+        Query(In("v", [0, 1, 2, 3]), agg=Count()),
+    ])
+    assert res[0].attribution["shards"] == 1
+    assert res[1].attribution["shards"] == 3
+    assert sq.shards_pruned == 2
+
+
+def test_slow_query_log_thresholds():
+    rng = np.random.default_rng(11)
+    table = _table(rng, 400)
+    queries = _queries()
+    # latency threshold 0: every ticket is "slow"
+    sched = _scheduler(table, telemetry=Telemetry(slow_latency_s=0.0))
+    sched.serve(queries)
+    log = list(sched.telemetry.slow_queries)
+    assert len(log) == len(queries)
+    assert log[0]["predicate"] == repr(queries[0].where)
+    assert log[0]["attribution"]["sensings"] >= 1
+    assert log[0]["latency_s"] > 0
+    # unreachable thresholds: nothing logged
+    quiet = _scheduler(
+        table,
+        telemetry=Telemetry(slow_latency_s=1e9, slow_sensings=10**9),
+    )
+    quiet.serve(queries)
+    assert list(quiet.telemetry.slow_queries) == []
+    # sensing threshold alone also triggers
+    sensed = _scheduler(table, telemetry=Telemetry(slow_sensings=1))
+    sensed.serve(queries)
+    assert len(sensed.telemetry.slow_queries) == len(queries)
