@@ -49,8 +49,10 @@ def interleaved_best_of(timers: dict, reps: int = REPS) -> dict:
     return best
 
 
-def latency_summary(samples) -> dict:
-    """p50/p95/mean of per-flush wall-clock samples (seconds).
+def latency_summary(samples) -> dict | None:
+    """p50/p95/mean of per-flush wall-clock samples (seconds), or ``None``
+    for an empty sample set (a benchmark path that served nothing has no
+    distribution to report — callers skip the line instead of crashing).
 
     Throughput gates use best-of-N interleaved timing (above); latency
     distributions additionally need tail percentiles, because a pipelined
@@ -61,7 +63,7 @@ def latency_summary(samples) -> dict:
     """
     samples = list(samples)
     if not samples:
-        raise ValueError("no samples")
+        return None
     h = Histogram(capacity=len(samples))
     for s in samples:
         h.observe(s)

@@ -115,6 +115,11 @@ class FlashArray:
     # incremental ingest is gated on this — appending B rows must program
     # O(B) pages, not O(num_rows) (delta-page programming)
     esp_programs: int = 0
+    # whole-block erases issued by erase_rebuild (NAND programs only 1->0,
+    # so reclaiming tombstoned rows means erasing every block a stripe
+    # occupies and reprogramming the live data — compaction charges these
+    # in the SSD projection at t_bers_ms)
+    block_erases: int = 0
 
     # -- host API (fc_write / fc_read, §6.3) -------------------------------
     def fc_write(
@@ -174,6 +179,35 @@ class FlashArray:
         """Plan + execute a bulk bitwise expression; returns logical words."""
         plan = Planner(self.layout).compile(e)
         return self.execute(plan)
+
+    def erase_rebuild(self) -> int:
+        """Erase every programmed block and reset for a full reprogram.
+
+        NAND programs cells 1->0 only; clearing a tombstone-riddled stripe
+        back to fresh capacity requires erasing whole blocks (the erase
+        unit) and reprogramming the surviving data — this is the device
+        half of compaction.  Every block the layout occupies takes one P/E
+        cycle (``pec``) and counts toward ``block_erases``; the page store
+        and layout come back empty, but the store's content and region
+        epochs are seeded ABOVE their old values, so every plan-cache /
+        snapshot-cache key minted against the old data is permanently
+        stale (a rebuild must never collide with a cached artifact of the
+        pre-compaction page contents).  Returns the blocks erased.
+        """
+        blocks = {p.block for p in self.layout.placements.values()}
+        for b in blocks:
+            self.pec[b] = self.pec.get(b, 0) + 1
+        self.block_erases += len(blocks)
+        old = self.store
+        self.store = PackedStore(planes=old.planes)
+        self.store.epoch = old.epoch + 1
+        self.store.region_epochs = {
+            r: e + 1 for r, e in old.region_epochs.items()
+        }
+        self.layout = Layout(wls_per_block=self.layout.wls_per_block)
+        self.program_configs.clear()
+        self._non_esp.clear()
+        return len(blocks)
 
     # -- sensing ------------------------------------------------------------
     def _gather_cube(

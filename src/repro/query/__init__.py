@@ -63,7 +63,12 @@ from repro.query.ast import (
     Sum,
     TopK,
 )
-from repro.query.bitmap import AppendDelta, BitmapStore, PageDelta
+from repro.query.bitmap import (
+    VALID_PAGE,
+    AppendDelta,
+    BitmapStore,
+    PageDelta,
+)
 from repro.query.compile import (
     CompiledQuery,
     FlushProgram,
@@ -108,6 +113,7 @@ __all__ = [
     "AppendDelta",
     "BitmapStore",
     "PageDelta",
+    "VALID_PAGE",
     "CompiledQuery",
     "FlushProgram",
     "QueryCompiler",

@@ -46,6 +46,13 @@ from repro.query.ast import Query
 
 TRUE_PAGE = "__all"
 FALSE_PAGE = "__none"
+# Per-stripe tombstone page: bit j is set while row j is live.  The
+# compiler ANDs it into every plan's sensing set (one extra wordline per
+# MWS — nearly free), so COUNT/MASK/aggregates only ever see live rows.
+# Stored NON-inverted: a delete clears logical bits, which is a physical
+# 1->0 transition — exactly the program NAND supports without an erase,
+# so tombstoning is a single delta-page ESP program however many rows die.
+VALID_PAGE = "__valid"
 
 
 def eq_region(column: str) -> str:
@@ -192,6 +199,11 @@ class BitmapStore:
     # snapshots stack under one vmap; padding bits are zero and masked out
     # of every aggregation (see valid_words_mask).
     min_words: int = 0
+    # rows tombstoned since ingest/rebuild: their VALID_PAGE bits are
+    # cleared, every plan masks them out, and compaction reclaims their
+    # capacity.  ``num_rows`` keeps counting them (row ids are stable
+    # between compactions); ``live_rows`` is the serving row count.
+    deleted_rows: int = 0
 
     @property
     def words(self) -> int:
@@ -245,6 +257,11 @@ class BitmapStore:
         self.logical.setdefault(
             FALSE_PAGE, np.zeros((self.words,), np.uint32)
         )
+        # the tombstone page starts as a copy of the all-rows page: every
+        # ingested row is live, every reserved tail row is 0 — which is
+        # also what masks rows >= num_rows out of NOT/MASK plans (the
+        # compiler splices this page into every plan's sensing set)
+        self.logical.setdefault(VALID_PAGE, ones.copy())
 
         for col, raw in table.items():
             vals = np.asarray(raw)
@@ -362,11 +379,14 @@ class BitmapStore:
         deltas: list[PageDelta] = []
 
         if b:
-            sw, words = self._tail_words(
-                TRUE_PAGE, np.ones((b,), np.uint8), n0, b
-            )
-            self._apply_words(TRUE_PAGE, sw, words)
-            deltas.append(PageDelta(TRUE_PAGE, sw, words))
+            for const in (TRUE_PAGE, VALID_PAGE):
+                # appended rows are live: the tombstone page's tail extends
+                # exactly like the all-rows page's (one delta program each)
+                sw, words = self._tail_words(
+                    const, np.ones((b,), np.uint8), n0, b
+                )
+                self._apply_words(const, sw, words)
+                deltas.append(PageDelta(const, sw, words))
 
         for col, ci in self.columns.items():
             vals = np.asarray(rows[col])
@@ -482,6 +502,144 @@ class BitmapStore:
             telemetry.observe("append_pages_programmed", delta.num_programs)
             telemetry.observe("append_program_s", t1 - t0)
 
+    # -- deletes / tombstones ------------------------------------------------
+    @property
+    def live_rows(self) -> int:
+        """Rows a query can still match (``num_rows`` minus tombstones)."""
+        return self.num_rows - self.deleted_rows
+
+    @property
+    def tombstone_density(self) -> float:
+        """Fraction of resident rows that are tombstoned (compaction
+        trigger: garbage the stripe carries through every sensing)."""
+        return self.deleted_rows / self.num_rows if self.num_rows else 0.0
+
+    def live_bits(self) -> np.ndarray:
+        """Boolean live-row mask over ``num_rows`` (the VALID_PAGE bits)."""
+        page = self.logical[VALID_PAGE]
+        bits = np.unpackbits(
+            page.view(np.uint8), bitorder="little", count=self.num_rows
+        )
+        return bits.astype(bool)
+
+    def check_delete(self, row_ids) -> np.ndarray:
+        """Validate a delete batch WITHOUT mutating; returns the unique ids.
+
+        Raises — before any page state can be touched — on ids outside
+        ``[0, num_rows)``, duplicate ids within the batch, and ids already
+        tombstoned (a double delete is a client bug worth surfacing, and
+        silently accepting it would skew ``deleted_rows`` accounting).
+        """
+        if VALID_PAGE not in self.logical:
+            raise ValueError("delete() needs an ingested store")
+        raw = np.asarray(row_ids)
+        if raw.size and raw.dtype.kind not in "iu":
+            raise ValueError(
+                f"delete ids must be integers, got dtype {raw.dtype} "
+                "(a float id would silently truncate to a neighbour row)"
+            )
+        ids = np.unique(raw.astype(np.int64, copy=False))
+        if ids.size != len(np.asarray(row_ids).ravel()):
+            raise ValueError("delete batch has duplicate row ids")
+        if ids.size and (ids[0] < 0 or ids[-1] >= self.num_rows):
+            raise ValueError(
+                f"delete ids outside [0, {self.num_rows}): "
+                f"{ids[(ids < 0) | (ids >= self.num_rows)][:5]}"
+            )
+        if ids.size:
+            page = self.logical[VALID_PAGE]
+            dead = (page[ids // WORD_BITS] >> (ids % WORD_BITS)) & 1 == 0
+            if dead.any():
+                raise ValueError(
+                    f"rows already deleted: {ids[dead][:5]}"
+                )
+        return ids
+
+    def delete(self, row_ids) -> AppendDelta:
+        """Tombstone ``row_ids``; returns the (one-page) delta to program.
+
+        Clears the rows' VALID_PAGE bits — a physical 1->0 transition on
+        the non-inverted tombstone page, so however many rows die the cost
+        is ONE delta-page ESP program spanning the touched words.  No
+        other page changes: row ids stay stable, plans stay warm (the
+        content epoch bumps so snapshot-level caches refresh, but no
+        column or region epoch moves), and every plan's spliced valid
+        wordline masks the rows out of all subsequent sensings.
+        """
+        ids = self.check_delete(row_ids)
+        if not ids.size:
+            return AppendDelta(rows=0, start_row=self.num_rows, pages=())
+        page = self.logical[VALID_PAGE]
+        dead = np.zeros_like(page)
+        np.bitwise_or.at(
+            dead,
+            ids // WORD_BITS,
+            (np.uint32(1) << (ids % WORD_BITS)).astype(np.uint32),
+        )
+        page &= ~dead
+        sw = int(ids[0] // WORD_BITS)
+        ew = int(ids[-1] // WORD_BITS) + 1
+        self.deleted_rows += int(ids.size)
+        self.epoch += 1
+        return AppendDelta(
+            rows=0,
+            start_row=self.num_rows,
+            pages=(
+                PageDelta(VALID_PAGE, sw, page[sw:ew].copy()),
+            ),
+        )
+
+    def to_table(self) -> dict[str, np.ndarray]:
+        """Reconstruct the resident rows' column values from the BSI pages.
+
+        Every column carries a full bit-sliced index (``bits`` slices cover
+        its maximum value), so ``value[row] = sum_b slice_b[row] << b`` is
+        exact — this is what compaction rebuilds a stripe from, instead of
+        requiring callers to retain their source tables.
+        """
+        n = self.num_rows
+        out: dict[str, np.ndarray] = {}
+        for col, ci in self.columns.items():
+            vals = np.zeros((n,), dtype=np.int64)
+            for b in range(ci.bits):
+                bits = np.unpackbits(
+                    self.logical[bsi_page(col, b)].view(np.uint8),
+                    bitorder="little",
+                    count=n,
+                )
+                vals |= bits.astype(np.int64) << b
+            out[col] = vals
+        return out
+
+    def rebuild(
+        self,
+        table: dict[str, np.ndarray],
+        *,
+        reserve_rows: int = 0,
+        schema: dict[str, tuple[int, ...]] | None = None,
+        min_words: int | None = None,
+    ) -> None:
+        """Reset and re-ingest in place — the host half of compaction.
+
+        Keeps the object identity (schedulers, compilers, and aggregators
+        hold references) and the epoch counters: the content ``epoch``
+        keeps rising and every column's metadata epoch bumps through
+        ``ingest``, so no cache key minted against the old index can ever
+        match the rebuilt one.  ``schema`` (normally the pre-compaction
+        value sets) keeps pages for values the surviving rows no longer
+        contain, so a sharded fleet stays merge-aligned after a partial
+        rebuild; ``reserve_rows`` re-opens append headroom in the freshly
+        erased pages; ``min_words`` re-applies fleet-wide padding.
+        """
+        self.logical.clear()
+        self.columns.clear()
+        self.num_rows = 0
+        self.capacity_rows = 0
+        self.deleted_rows = 0
+        if min_words is not None:
+            self.min_words = min_words
+        self.ingest(table, schema=schema, reserve_rows=reserve_rows)
+
     # -- program ------------------------------------------------------------
     def place_into(self, layout, warmup: Iterable[Query] = ()) -> None:
         """Compute §6.3 placements for every bitmap page into ``layout``.
@@ -519,7 +677,10 @@ class BitmapStore:
                 layout.place_colocated(
                     bsi_new, inverted=False, region=bsi_region(col)
                 )
-        for const in (TRUE_PAGE, FALSE_PAGE):
+        for const in (TRUE_PAGE, FALSE_PAGE, VALID_PAGE):
+            # VALID_PAGE placement must stay non-inverted: deletes clear
+            # logical bits in place, which is only the erase-free 1->0
+            # program NAND supports if physical == logical
             if const in self.logical and const not in layout:
                 layout.place_colocated([const], inverted=False)
 

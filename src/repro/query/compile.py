@@ -66,6 +66,7 @@ from repro.query.ast import And, Eq, In, Not, Or, Pred, Query, Range
 from repro.query.bitmap import (
     FALSE_PAGE,
     TRUE_PAGE,
+    VALID_PAGE,
     BitmapStore,
     bsi_page,
     eq_page,
@@ -96,7 +97,30 @@ def _le_expr(store: BitmapStore, column: str, c: int) -> Expr:
 
 
 def lower(pred: Pred, store: BitmapStore) -> Expr:
-    """Lower a FlashQL predicate to a ``core.expr`` tree over bitmap pages."""
+    """Lower a FlashQL predicate to a ``core.expr`` tree over bitmap pages.
+
+    The root is ANDed with the store's tombstone (valid-row) page, so
+    every compiled plan senses exactly ONE extra wordline and can only
+    match live rows: deleted rows are masked inside the MWS itself, and —
+    because the valid page's reserved tail bits are erased-zero — so are
+    rows between ``num_rows`` and ``capacity_rows`` (a cached NOT/MASK
+    plan evaluated after ``reserve_rows`` headroom exists cannot leak the
+    reserved tail into COUNT/MASK).  A predicate that lowers to the
+    constant FALSE page skips the splice (it matches nothing already);
+    constant TRUE lowers to the valid page itself.
+    """
+    e = _lower(pred, store)
+    if isinstance(e, Page):
+        if e.name == FALSE_PAGE:
+            return e
+        if e.name == TRUE_PAGE:
+            return Page(VALID_PAGE)
+    return and_(e, Page(VALID_PAGE))
+
+
+def _lower(pred: Pred, store: BitmapStore) -> Expr:
+    """The recursive lowering body (no valid-page splice — ``lower``
+    splices exactly once, at the root)."""
     if isinstance(pred, Eq):
         ci = store.columns.get(pred.column)
         if ci is None:
@@ -143,11 +167,11 @@ def lower(pred: Pred, store: BitmapStore) -> Expr:
             return factors[0]
         return and_(*factors)
     if isinstance(pred, Not):
-        return not_(lower(pred.child, store))
+        return not_(_lower(pred.child, store))
     if isinstance(pred, And):
-        return and_(*(lower(c, store) for c in pred.children))
+        return and_(*(_lower(c, store) for c in pred.children))
     if isinstance(pred, Or):
-        return or_(*(lower(c, store) for c in pred.children))
+        return or_(*(_lower(c, store) for c in pred.children))
     raise TypeError(f"not a FlashQL predicate: {pred!r}")
 
 

@@ -185,6 +185,7 @@ def project_traffic(
     num_queries: int,
     host_postprocess: bool,
     esp_programs: int = 0,
+    block_erases: int = 0,
     ssd: SSDConfig = DEFAULT_SSD,
     name: str = "flashql",
 ) -> dict:
@@ -201,8 +202,12 @@ def project_traffic(
     Flash-Cosmos side (ESP reliability costs ~2x a plain SLC program) and
     at ``t_prog_slc_us`` for the OSP baseline, which rewrites the same
     pages through the ordinary program path.
+
+    ``block_erases`` counts whole-block erases (compaction rebuilds): both
+    platforms pay ``t_bers_ms`` per block — garbage collection is the same
+    erase-before-program dance wherever the data is computed on.
     """
-    if not command_shape_counts and not esp_programs:
+    if not command_shape_counts and not esp_programs and not block_erases:
         raise ValueError("no traffic served yet")
     wl = BulkBitwiseWorkload(
         name=name,
@@ -220,10 +225,11 @@ def project_traffic(
     osp = run_workload(wl, Platform.OSP, ssd)
     t_esp = esp_programs * ssd.t_esp_us * 1e-6
     t_prog_osp = esp_programs * ssd.t_prog_slc_us * 1e-6
-    fc_time = fc.time_s + t_esp
-    osp_time = osp.time_s + t_prog_osp
-    fc_energy = fc.energy_j + t_esp * ssd.p_prog_w
-    osp_energy = osp.energy_j + t_prog_osp * ssd.p_prog_w
+    t_erase = block_erases * ssd.t_bers_ms * 1e-3
+    fc_time = fc.time_s + t_esp + t_erase
+    osp_time = osp.time_s + t_prog_osp + t_erase
+    fc_energy = fc.energy_j + (t_esp + t_erase) * ssd.p_prog_w
+    osp_energy = osp.energy_j + (t_prog_osp + t_erase) * ssd.p_prog_w
     return {
         "workload": wl.name,
         "fc_time_s": fc_time,
@@ -231,6 +237,7 @@ def project_traffic(
         "osp_time_s": osp_time,
         "osp_energy_j": osp_energy,
         "esp_programs": esp_programs,
+        "block_erases": block_erases,
         "speedup_vs_osp": osp_time / fc_time,
         "energy_ratio_vs_osp": osp_energy / fc_energy,
     }
@@ -287,6 +294,15 @@ class BatchScheduler:
     # queue small append() batches and program them as one coalesced delta
     # per touched page on the next flush (or apply_appends())
     coalesce_appends: bool = False
+    # -- background-compaction policy (see compact()) -----------------------
+    # auto-compact when the stripe's tombstone density crosses this (None
+    # disables the policy; compact() stays available explicitly).  Checked
+    # at mutation boundaries — after delete()/update()/apply_appends() —
+    # never mid-flush, so no ticket ever spans a rebuild.
+    compact_density: float | None = None
+    # on append overflow, rebuild into wider pages (capacity growth folded
+    # into the compaction path) instead of rejecting the batch
+    grow_on_overflow: bool = False
     # the unified metrics registry + trace recorder; pass
     # Telemetry(enabled=False) to strip every per-event recorder off the
     # hot path (counters keep counting — stats()/projection read them)
@@ -354,6 +370,23 @@ class BatchScheduler:
                 f"append() with {len(self._pending)} queries pending; "
                 "flush() first so no ticket spans the mutation"
             )
+        try:
+            return self._admit_append(rows)
+        except ValueError as err:
+            if not (self.grow_on_overflow and "overflows" in str(err)):
+                raise
+            # capacity growth rides the compaction rebuild: re-stripe into
+            # wider pages (the failed attempt validated before mutating, so
+            # nothing is half-applied), leaving the batch plus the original
+            # headroom — or twice the batch, whichever is larger — free
+            b = len(next(iter(rows.values())))
+            self.compact(
+                reserve_rows=b
+                + max(2 * b, self.store.capacity_rows - self.store.live_rows)
+            )
+            return self._admit_append(rows)
+
+    def _admit_append(self, rows: dict) -> int:
         if self.coalesce_appends:
             queue_append(self.store, self._append_buf, rows)
             return 0
@@ -366,7 +399,23 @@ class BatchScheduler:
         )
         self.telemetry.count("rows_appended", delta.rows)
         self.telemetry.count("esp_delta_programs", delta.num_programs)
+        self._count_programmed_words(delta, logical=True)
         return delta.num_programs
+
+    def _count_programmed_words(self, delta, *, logical: bool) -> None:
+        """Write-amplification accounting for one programmed delta.
+
+        ``words_programmed`` counts every word physically ESP-programmed;
+        ``words_written`` counts only the words a client mutation had to
+        change (``logical=True``).  Compaction reprograms surviving data
+        the client never touched, so it adds to the physical side only —
+        the ratio is the index's write amplification
+        (``stats()["write_amplification"]``, also in snapshots).
+        """
+        words = sum(int(pd.words.shape[0]) for pd in delta.pages)
+        self.telemetry.count("words_programmed", words)
+        if logical:
+            self.telemetry.count("words_written", words)
 
     @property
     def appends_queued(self) -> int:
@@ -389,6 +438,140 @@ class BatchScheduler:
         )
         self._append_buf.clear()
         return self._program_append(rows)
+
+    # -- deletes / updates / compaction --------------------------------------
+    def delete(self, row_ids) -> int:
+        """Tombstone rows; returns pages ESP-programmed (always 1).
+
+        Queued appends apply first so ``row_ids`` address the fully
+        up-to-date table; like appends, deletes are refused while tickets
+        are in flight.  The whole batch costs one delta-page program of
+        the stripe's tombstone page — no other page changes, no region
+        epoch moves, every cached plan stays warm (its spliced valid
+        wordline reads the new tombstones on the next sensing).  May
+        trigger the auto-compaction policy (``compact_density``).
+        """
+        if self._pending:
+            raise RuntimeError(
+                f"delete() with {len(self._pending)} queries pending; "
+                "flush() first so no ticket spans the mutation"
+            )
+        self.apply_appends()
+        delta = self.store.delete(row_ids)
+        self.store.program_delta(
+            self.device, delta, telemetry=self.telemetry
+        )
+        self.telemetry.count("rows_deleted", len(np.asarray(row_ids)))
+        self.telemetry.count("esp_delta_programs", delta.num_programs)
+        self._count_programmed_words(delta, logical=True)
+        self.telemetry.gauge(
+            "tombstone_density", self.store.tombstone_density
+        )
+        self._maybe_compact()
+        return delta.num_programs
+
+    def update(self, row_ids, rows: dict[str, object]) -> int:
+        """Update = delete + append: tombstone ``row_ids``, append ``rows``
+        (which get fresh row ids at the tail); returns pages programmed.
+
+        Both halves validate BEFORE either mutates, so a bad update can
+        never leave the rows deleted but not re-appended.  Reuses delta-
+        page programming + region epochs end to end: a value-stable update
+        (no first-seen value, no grown BSI width) invalidates no plan.
+        """
+        if self._pending:
+            raise RuntimeError(
+                f"update() with {len(self._pending)} queries pending; "
+                "flush() first so no ticket spans the mutation"
+            )
+        self.apply_appends()
+        ids = self.store.check_delete(row_ids)
+        arrays = {c: np.asarray(v) for c, v in rows.items()}
+        b = self.store.check_append(arrays)
+        if b != ids.size:
+            raise ValueError(
+                f"update() got {ids.size} row ids but {b} replacement rows"
+            )
+        n = self.delete(ids)
+        n += self.append(arrays)
+        self.telemetry.count("rows_updated", ids.size)
+        return n
+
+    def _maybe_compact(self) -> bool:
+        """The background-compaction policy: rebuild once tombstone density
+        crosses ``compact_density`` (checked only at mutation boundaries,
+        with no tickets in flight by construction)."""
+        if (
+            self.compact_density is None
+            or self.store.tombstone_density < self.compact_density
+        ):
+            return False
+        self.compact()
+        return True
+
+    def compact(self, reserve_rows: int | None = None) -> dict:
+        """Rewrite the stripe without its tombstoned rows; returns stats.
+
+        The erase-unit-aware rebuild a real device must do: NAND programs
+        only 1->0, so reclaiming tombstoned capacity means erasing every
+        block the stripe occupies (charged per block at ``t_bers_ms`` in
+        the SSD projection, one P/E cycle each) and ESP-reprogramming the
+        surviving rows.  Surviving rows are renumbered densely (row ``k``
+        = the k-th live row in old id order); ``reserve_rows`` sets the
+        fresh append headroom and defaults to restoring the stripe's full
+        pre-compaction capacity — this same path grows capacity when
+        ``grow_on_overflow`` re-stripes into wider pages.  The reprogram
+        counts toward physical (but not logical) programmed words: the
+        write-amplification cost of garbage collection.
+        """
+        if self._pending:
+            raise RuntimeError(
+                f"compact() with {len(self._pending)} queries pending; "
+                "flush() first so no ticket spans the rebuild"
+            )
+        self.apply_appends()
+        store, tele = self.store, self.telemetry
+        t0 = time.perf_counter()
+        dropped = store.deleted_rows
+        live = store.live_bits()
+        table = {c: v[live] for c, v in store.to_table().items()}
+        if reserve_rows is None:
+            reserve_rows = store.capacity_rows - store.live_rows
+        schema = {c: ci.values for c, ci in store.columns.items()}
+        erased = self.device.erase_rebuild()
+        store.rebuild(table, reserve_rows=reserve_rows, schema=schema)
+        store.program(self.device)
+        self.device.reset_after_rebuild()
+        self._flush_programs.clear()
+        self._extras_cache.clear()
+        self._mask_cache = None
+        words = sum(int(w.shape[0]) for w in store.logical.values())
+        tele.count("compactions")
+        tele.count("block_erases", erased)
+        tele.count("words_programmed", words)
+        tele.count("compaction_rows_dropped", dropped)
+        tele.gauge("tombstone_density", 0.0)
+        self._record_wear()
+        t1 = time.perf_counter()
+        tele.span("compact", "flush", t0, t1, args={"erased": erased})
+        tele.observe("compact_s", t1 - t0)
+        return {
+            "rows_dropped": dropped,
+            "live_rows": store.num_rows,
+            "capacity_rows": store.capacity_rows,
+            "blocks_erased": erased,
+            "words_reprogrammed": words,
+            "seconds": t1 - t0,
+        }
+
+    def _record_wear(self) -> None:
+        """Per-block wear gauges (P/E cycles) after erase-heavy operations."""
+        pec = self.device.pec
+        if pec:
+            self.telemetry.gauge("max_pec", max(pec.values()))
+            self.telemetry.gauge(
+                "mean_pec", sum(pec.values()) / len(pec)
+            )
 
     # -- admission ----------------------------------------------------------
     def submit(self, query: Query) -> int:
@@ -596,6 +779,17 @@ class BatchScheduler:
             "rows_appended": self.rows_appended,
             "esp_delta_programs": self.esp_delta_programs,
             "append_batches_coalesced": self.append_batches_coalesced,
+            "rows_deleted": self.rows_deleted,
+            "rows_updated": self.rows_updated,
+            "compactions": self.compactions,
+            "block_erases": self.block_erases,
+            "live_rows": self.store.live_rows,
+            "tombstone_density": self.store.tombstone_density,
+            "write_amplification": (
+                self.words_programmed / self.words_written
+                if self.words_written
+                else 1.0
+            ),
         }
 
     def projection(self, ssd: SSDConfig = DEFAULT_SSD) -> dict:
@@ -613,6 +807,7 @@ class BatchScheduler:
             num_queries=int(self.queries_served),
             host_postprocess=self._host_postprocess,
             esp_programs=int(self.esp_delta_programs),
+            block_erases=int(self.block_erases),
             ssd=ssd,
             name=f"flashql({int(self.queries_served)}q)",
         )
@@ -633,5 +828,12 @@ registry_counters(
         "esp_delta_programs",
         "append_batches_coalesced",
         "wordlines_sensed",
+        "rows_deleted",
+        "rows_updated",
+        "compactions",
+        "block_erases",
+        "words_programmed",
+        "words_written",
+        "compaction_rows_dropped",
     ),
 )

@@ -402,6 +402,73 @@ class ShardedBitmapStore:
         self.num_rows = n0 + b
         return deltas
 
+    # -- deletes / tombstones ------------------------------------------------
+    @property
+    def deleted_rows(self) -> int:
+        return sum(st.deleted_rows for st in self.shards)
+
+    @property
+    def live_rows(self) -> int:
+        return self.num_rows - self.deleted_rows
+
+    @property
+    def tombstone_density(self) -> float:
+        """Fleet-wide tombstone fraction (the auto-compaction trigger)."""
+        return self.deleted_rows / self.num_rows if self.num_rows else 0.0
+
+    def locate_rows(self, row_ids) -> dict[int, np.ndarray]:
+        """Route global row ids to shard-local positions.
+
+        Returns ``{shard: local positions}``.  ``row_maps`` are NOT
+        ascending in global id on ``stripe_key`` fleets (they follow the
+        key-sorted stripe order), so routing inverts the maps outright
+        instead of binary-searching them.
+        """
+        raw = np.asarray(row_ids)
+        if raw.size and raw.dtype.kind not in "iu":
+            raise ValueError(
+                f"delete ids must be integers, got dtype {raw.dtype} "
+                "(a float id would silently truncate to a neighbour row)"
+            )
+        ids = np.unique(raw.astype(np.int64, copy=False))
+        if ids.size != raw.size:
+            raise ValueError("delete batch has duplicate row ids")
+        if ids.size and (ids[0] < 0 or ids[-1] >= self.num_rows):
+            raise ValueError(
+                f"delete ids outside [0, {self.num_rows}): "
+                f"{ids[(ids < 0) | (ids >= self.num_rows)][:5]}"
+            )
+        shard_of = np.full((self.num_rows,), -1, dtype=np.int64)
+        pos_of = np.zeros((self.num_rows,), dtype=np.int64)
+        for s, rmap in enumerate(self.row_maps):
+            shard_of[rmap] = s
+            pos_of[rmap] = np.arange(len(rmap))
+        groups: dict[int, np.ndarray] = {}
+        owners = shard_of[ids]
+        for s in np.unique(owners):
+            groups[int(s)] = pos_of[ids[owners == s]]
+        return groups
+
+    def check_delete(self, row_ids) -> dict[int, np.ndarray]:
+        """Fleet-wide delete validation (no mutation); returns the routing.
+        Every destination shard validates BEFORE any shard mutates."""
+        groups = self.locate_rows(row_ids)
+        for s, local in groups.items():
+            self.shards[s].check_delete(local)
+        return groups
+
+    def delete(self, row_ids) -> dict[int, object]:
+        """Tombstone global ``row_ids``; returns per-shard deltas to program.
+
+        Each destination stripe clears its local VALID_PAGE bits — one
+        delta-page program per touched stripe, no row renumbering, no
+        region epoch moves, plans stay warm fleet-wide.
+        """
+        groups = self.check_delete(row_ids)
+        return {
+            s: self.shards[s].delete(local) for s, local in groups.items()
+        }
+
     # -- program ------------------------------------------------------------
     def program(
         self, devices: list[FlashDevice], warmup: Iterable[Query] = ()
@@ -453,6 +520,13 @@ class ShardedFlashQL:
     # per-reduce-signature transfers) — the differential oracle.
     pipeline: bool = False
     coalesce_appends: bool = False
+    # background-compaction policy: once the fleet's tombstone density
+    # crosses this threshold (checked at mutation boundaries, never mid-
+    # flush), compact() rebuilds the tombstoned stripes; None disables
+    compact_density: float | None = None
+    # grow capacity through the compaction rebuild instead of refusing an
+    # overflowing append (re-stripes into wider pages, fleet-wide)
+    grow_on_overflow: bool = False
     compilers: list[QueryCompiler] = field(default_factory=list)
     # the unified metrics registry + trace recorder shared by the fleet;
     # pass Telemetry(enabled=False) to strip every per-event recorder off
@@ -566,6 +640,24 @@ class ShardedFlashQL:
                 f"append() with {len(self._meta)} tickets in flight; "
                 "flush() the fleet first so no ticket spans the mutation"
             )
+        try:
+            return self._admit_append(rows)
+        except ValueError as err:
+            if not (self.grow_on_overflow and "overflows" in str(err)):
+                raise
+            # capacity growth rides the compaction rebuild: every stripe
+            # re-ingests into wider pages (the failed attempt validated
+            # before mutating, so nothing is half-applied) with headroom
+            # for the batch plus the original reserve — or twice the
+            # batch, whichever is larger (any one stripe may absorb it)
+            b = len(next(iter(rows.values())))
+            self.compact(
+                reserve_rows=b + max(2 * b, self.store.reserve_rows),
+                rebuild_all=True,
+            )
+            return self._admit_append(rows)
+
+    def _admit_append(self, rows: dict[str, np.ndarray]) -> int:
         if self.coalesce_appends:
             # shared validate+queue logic (per-batch column check, then
             # cumulative schema/stripe-capacity check) — see
@@ -577,15 +669,18 @@ class ShardedFlashQL:
     def _program_append(self, rows: dict[str, np.ndarray]) -> int:
         deltas = self.store.append(rows)  # validates before mutating
         tele = self.telemetry
-        pages = 0
+        pages = words = 0
         for s, delta in deltas.items():
             self.store.shards[s].program_delta(
                 self.devices[s], delta, telemetry=tele
             )
             tele.count(f"shard{s}.esp_programs", delta.num_programs)
             pages += delta.num_programs
+            words += sum(int(pd.words.shape[0]) for pd in delta.pages)
             tele.count("rows_appended", delta.rows)
         tele.count("esp_delta_programs", pages)
+        tele.count("words_programmed", words)
+        tele.count("words_written", words)
         # row counts moved: host-side valid-row masks and their
         # device-resident stacks are stale (the fleet snapshot stack and
         # extras caches invalidate through the stores' content epochs)
@@ -611,6 +706,237 @@ class ShardedFlashQL:
         )
         self._append_buf.clear()
         return self._program_append(rows)
+
+    # -- deletes / updates / compaction --------------------------------------
+    def delete(self, row_ids) -> int:
+        """Tombstone global rows fleet-wide; returns pages ESP-programmed.
+
+        Routing inverts ``row_maps`` (global id -> shard, local position);
+        every destination stripe validates before any stripe mutates, then
+        each programs ONE tombstone delta page.  Queued appends apply
+        first, and — like appends — deletes are refused while tickets are
+        in flight.  May trigger the auto-compaction policy.
+        """
+        if self._meta:
+            raise RuntimeError(
+                f"delete() with {len(self._meta)} tickets in flight; "
+                "flush() the fleet first so no ticket spans the mutation"
+            )
+        self.apply_appends()
+        deltas = self.store.delete(row_ids)
+        tele = self.telemetry
+        pages = words = 0
+        for s, delta in deltas.items():
+            self.store.shards[s].program_delta(
+                self.devices[s], delta, telemetry=tele
+            )
+            tele.count(f"shard{s}.esp_programs", delta.num_programs)
+            pages += delta.num_programs
+            words += sum(int(pd.words.shape[0]) for pd in delta.pages)
+        tele.count("rows_deleted", int(np.asarray(row_ids).size))
+        tele.count("esp_delta_programs", pages)
+        tele.count("words_programmed", words)
+        tele.count("words_written", words)
+        tele.gauge("tombstone_density", self.store.tombstone_density)
+        self._masks = None
+        self._maskmat_cache.clear()
+        self._mask_rows.clear()
+        self._maybe_compact()
+        return pages
+
+    def update(self, row_ids, rows: dict[str, object]) -> int:
+        """Update = delete + append (replacement rows get fresh tail ids).
+
+        Both halves validate BEFORE either mutates — a bad update can
+        never leave rows deleted but not re-appended.  Returns pages
+        programmed (0 pending flush when appends coalesce).
+        """
+        if self._meta:
+            raise RuntimeError(
+                f"update() with {len(self._meta)} tickets in flight; "
+                "flush() the fleet first so no ticket spans the mutation"
+            )
+        self.apply_appends()
+        groups = self.store.check_delete(row_ids)
+        arrays = {c: np.asarray(v) for c, v in rows.items()}
+        b = self.store.check_append(arrays)
+        nids = sum(len(v) for v in groups.values())
+        if b != nids:
+            raise ValueError(
+                f"update() got {nids} row ids but {b} replacement rows"
+            )
+        n = self.delete(row_ids)
+        n += self.append(arrays)
+        self.telemetry.count("rows_updated", nids)
+        return n
+
+    def _maybe_compact(self) -> bool:
+        if (
+            self.compact_density is None
+            or self.store.tombstone_density < self.compact_density
+        ):
+            return False
+        self.compact()
+        return True
+
+    def compact(
+        self, reserve_rows: int | None = None, rebuild_all: bool = False
+    ) -> dict:
+        """Erase-unit-aware rebuild of the tombstoned stripes; returns stats.
+
+        Only stripes carrying tombstones erase and reprogram (their word
+        budget cannot grow: restored headroom never exceeds the stripe's
+        old capacity) — untouched stripes keep their devices, layouts, and
+        warm plans; their epochs do not move.  Surviving rows are
+        renumbered densely fleet-wide (row ``k`` = k-th live row in old
+        global order) but never migrate between stripes, so renumbering is
+        host-side metadata (``row_maps``) everywhere.  An explicit
+        ``reserve_rows`` that widens any stripe's pages — or
+        ``rebuild_all`` (the ``grow_on_overflow`` path) — escalates to a
+        full-fleet rebuild so shard snapshots keep stacking.  Reprogrammed
+        words count toward physical (never logical) write traffic: the
+        fleet's write amplification.
+        """
+        if self._meta:
+            raise RuntimeError(
+                f"compact() with {len(self._meta)} tickets in flight; "
+                "flush() the fleet first so no ticket spans the rebuild"
+            )
+        self.apply_appends()
+        sstore, tele = self.store, self.telemetry
+        t0 = time.perf_counter()
+        dropped = sstore.deleted_rows
+        active = sstore.active
+        live_local = {s: sstore.shards[s].live_bits() for s in active}
+        live_global = {s: sstore.row_maps[s][live_local[s]] for s in active}
+        all_live = np.sort(
+            np.concatenate(
+                [live_global[s] for s in active]
+                or [np.zeros((0,), np.int64)]
+            )
+        )
+
+        def shard_reserve(s: int) -> int:
+            if reserve_rows is not None:
+                return reserve_rows
+            st = sstore.shards[s]
+            return st.capacity_rows - st.live_rows
+
+        rebuild = [
+            s
+            for s in active
+            if rebuild_all or sstore.shards[s].deleted_rows
+        ]
+        fleet_words = max((st.min_words for st in sstore.shards), default=0)
+        needed = max(
+            (
+                _num_words(int(live_local[s].sum()) + shard_reserve(s))
+                for s in rebuild
+            ),
+            default=0,
+        )
+        if needed > fleet_words and not rebuild_all:
+            # wider pages on one stripe would break fleet stacking —
+            # re-stripe everything at the new width
+            rebuild_all, rebuild = True, list(active)
+        if rebuild_all:
+            fleet_words = max(
+                (
+                    _num_words(int(live_local[s].sum()) + shard_reserve(s))
+                    for s in rebuild
+                ),
+                default=0,
+            )
+
+        # rebuilt stripes must share the fleet's canonical page placement
+        # (fused cross-shard execution gathers identical (block, wordline)
+        # coordinates on every chip): fork an untouched device's layout
+        # when one survives, else recompute one canonical layout
+        untouched = [s for s in active if s not in set(rebuild)]
+        canonical = self.devices[untouched[0]].layout if untouched else None
+
+        erased = pages = words = 0
+        for s in rebuild:
+            st, dev = sstore.shards[s], self.devices[s]
+            keep = live_local[s]
+            table = {c: v[keep] for c, v in st.to_table().items()}
+            blocks = dev.erase_rebuild()
+            st.rebuild(
+                table,
+                reserve_rows=shard_reserve(s),
+                schema=sstore.schema,
+                min_words=fleet_words,
+            )
+            if canonical is None:
+                canonical = Layout(wls_per_block=dev.layout.wls_per_block)
+                st.place_into(canonical)
+            dev.layout = canonical.fork()
+            for name, page_words in st.logical.items():
+                dev.fc_write(name, page_words, esp=True)
+            dev.reset_after_rebuild()
+            erased += blocks
+            pages += len(st.logical)
+            words += sum(int(w.shape[0]) for w in st.logical.values())
+            tele.count(f"shard{s}.block_erases", blocks)
+            tele.count(f"shard{s}.esp_programs", len(st.logical))
+            sstore.shard_values[s] = {
+                col: tuple(int(v) for v in np.unique(vals))
+                for col, vals in table.items()
+            }
+            if sstore.stripe_key is not None:
+                keys = table.get(sstore.stripe_key, np.zeros((0,)))
+                sstore.stripe_bounds[s] = (
+                    (int(keys.min()), int(keys.max())) if len(keys) else None
+                )
+
+        # dense global renumbering: rank of each surviving old id (host
+        # metadata only — untouched stripes' pages and epochs stay put)
+        for s in active:
+            sstore.row_maps[s] = np.searchsorted(all_live, live_global[s])
+        sstore.num_rows = int(all_live.size)
+        if reserve_rows is not None:
+            sstore.reserve_rows = reserve_rows
+
+        self._masks = None
+        self._fleet_stack = None
+        self._maskmat_cache.clear()
+        self._mask_rows.clear()
+        self._group_cache.clear()
+        self._extras_cache.clear()
+        self._flush_programs.clear()
+
+        tele.count("compactions")
+        tele.count("block_erases", erased)
+        tele.count("words_programmed", words)
+        tele.count("compaction_rows_dropped", dropped)
+        tele.gauge("tombstone_density", sstore.tombstone_density)
+        self._record_wear()
+        t1 = time.perf_counter()
+        tele.span(
+            "compact",
+            "flush",
+            t0,
+            t1,
+            args={"erased": erased, "shards": len(rebuild)},
+        )
+        tele.observe("compact_s", t1 - t0)
+        return {
+            "rows_dropped": dropped,
+            "live_rows": sstore.num_rows,
+            "shards_rebuilt": len(rebuild),
+            "blocks_erased": erased,
+            "words_reprogrammed": words,
+            "seconds": t1 - t0,
+        }
+
+    def _record_wear(self) -> None:
+        """Fleet-wide per-block wear gauges (P/E cycles)."""
+        cycles = [
+            n for dev in self.devices for n in dev.pec.values()
+        ]
+        if cycles:
+            self.telemetry.gauge("max_pec", max(cycles))
+            self.telemetry.gauge("mean_pec", sum(cycles) / len(cycles))
 
     # -- admission ----------------------------------------------------------
     def submit(self, query: Query) -> int:
@@ -1232,6 +1558,17 @@ class ShardedFlashQL:
             "rows_appended": self.rows_appended,
             "esp_delta_programs": self.esp_delta_programs,
             "append_batches_coalesced": self.append_batches_coalesced,
+            "rows_deleted": self.rows_deleted,
+            "rows_updated": self.rows_updated,
+            "compactions": self.compactions,
+            "block_erases": self.block_erases,
+            "live_rows": self.store.live_rows,
+            "tombstone_density": self.store.tombstone_density,
+            "write_amplification": (
+                self.words_programmed / self.words_written
+                if self.words_written
+                else 0.0
+            ),
         }
 
     def projection(self, ssd: SSDConfig = DEFAULT_SSD) -> dict:
@@ -1250,6 +1587,9 @@ class ShardedFlashQL:
                 num_queries=self.queries_served,
                 host_postprocess=self._host_postprocess,
                 esp_programs=self.shard_esp_programs[s],
+                block_erases=int(
+                    self.telemetry.value(f"shard{s}.block_erases")
+                ),
                 ssd=ssd,
                 name=f"flashql-shard{s}({self.queries_served}q)",
             )
@@ -1277,6 +1617,7 @@ class ShardedFlashQL:
             "osp_energy_j": osp_e,
             "speedup_vs_osp": osp_t / fc_t,
             "energy_ratio_vs_osp": osp_e / fc_e,
+            "block_erases": sum(p.get("block_erases", 0) for p in per_shard),
             "per_shard": per_shard,
         }
 
@@ -1299,6 +1640,13 @@ registry_counters(
         "rows_appended",
         "esp_delta_programs",
         "append_batches_coalesced",
+        "rows_deleted",
+        "rows_updated",
+        "compactions",
+        "block_erases",
+        "words_programmed",  # physical ESP traffic (appends+deletes+GC)
+        "words_written",  # logical client mutations — WA denominator
+        "compaction_rows_dropped",
     ),
 )
 
@@ -1316,6 +1664,8 @@ def build_sharded_flashql(
     reserve_rows: int = 0,
     pipeline: bool = False,
     coalesce_appends: bool = False,
+    compact_density: float | None = None,
+    grow_on_overflow: bool = False,
 ) -> ShardedFlashQL:
     """Ingest ``table``, program ``num_shards`` fresh devices, return the
     serving frontend — the one-call path used by tests and benchmarks.
@@ -1340,4 +1690,6 @@ def build_sharded_flashql(
         queue_depth=queue_depth,
         pipeline=pipeline,
         coalesce_appends=coalesce_appends,
+        compact_density=compact_density,
+        grow_on_overflow=grow_on_overflow,
     )

@@ -56,15 +56,19 @@ TID_MERGE = "merge"
 TID_TICKETS = "tickets"
 
 
-def percentile(samples, q: float) -> float:
-    """The ``q``-th percentile (nearest-rank) of a non-empty sample set.
+def percentile(samples, q: float) -> float | None:
+    """The ``q``-th percentile (nearest-rank) of a sample set, or ``None``
+    when the set is empty.
 
     The single quantile implementation in the repo: histogram summaries
     and the benchmark harness (``benchmarks/_harness.py``) both call this.
+    A fresh (or fully-drained) ring has no distribution to summarize —
+    that is an answerable question, not an error, so callers get ``None``
+    and omit the quantile instead of unwinding a snapshot mid-build.
     """
     s = sorted(samples)
     if not s:
-        raise ValueError("no samples")
+        return None
     rank = min(max(1, math.ceil(q / 100 * len(s))), len(s))  # 1-based
     return s[rank - 1]
 
@@ -92,16 +96,20 @@ class Histogram:
         self.total += value
 
     def summary(self) -> dict:
-        if not self.count:
-            return {"count": 0}
-        return {
-            "count": self.count,
-            "mean": self.total / self.count,
-            "p50": percentile(self.samples, 50),
-            "p95": percentile(self.samples, 95),
-            "p99": percentile(self.samples, 99),
-            "max": max(self.samples),
-        }
+        """Count/mean plus ring quantiles; quantile keys are OMITTED (not
+        ``None``-valued, not raised over) when the ring holds no samples —
+        ``Telemetry.snapshot()`` must stay total on a fresh registry."""
+        out: dict = {"count": self.count}
+        if self.count:
+            out["mean"] = self.total / self.count
+        if self.samples:
+            out.update(
+                p50=percentile(self.samples, 50),
+                p95=percentile(self.samples, 95),
+                p99=percentile(self.samples, 99),
+                max=max(self.samples),
+            )
+        return out
 
 
 class Telemetry:

@@ -14,6 +14,7 @@ from repro.core.placement import Layout, auto_layout
 from repro.core.planner import Planner
 from repro.core.store import PackedStore
 from repro.query import (
+    VALID_PAGE,
     Agg,
     BatchScheduler,
     BitmapStore,
@@ -187,7 +188,10 @@ def test_warmup_placement_uses_auto_layout():
     placements = [dev.layout[f"c={v}"] for v in (0, 1, 2)]
     assert all(p.inverted for p in placements)
     assert len({p.block for p in placements}) == 1
-    assert plan.num_sensing_ops == 1
+    # the OR group itself resolves in ONE sensing; the second senses the
+    # spliced tombstone (live-row) wordline the compiler ANDs into every
+    # plan — it lives in the plain-page block, outside the inverted group
+    assert plan.num_sensing_ops == 2
 
 
 def test_spilling_plans_join_the_batched_flush():
@@ -441,7 +445,7 @@ def test_range_bsi_uses_logarithmic_pages():
     store = BitmapStore()
     store.ingest({"v": rng.integers(0, 256, 400)})
     expr = lower(Range("v", 10, 200), store)
-    names = {p.name for p in leaves(expr)}
+    names = {p.name for p in leaves(expr)} - {VALID_PAGE}
     assert all("#" in n for n in names), names
     assert len(names) <= 8  # 8 BSI slices for 8-bit values
 

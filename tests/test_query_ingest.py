@@ -132,9 +132,9 @@ def test_append_programs_scale_with_delta_not_total_rows():
     # on a 10x bigger store
     assert p_small == p_large > 0
     # and each append touches at most the pages the batch can set bits in:
-    # the all-rows page + per column min(B, cardinality) equality tails +
-    # its BSI slices — never the whole index
-    bound = 1 + (min(16, 8) + 3) + (min(16, 64) + 6)
+    # the all-rows + tombstone pages + per column min(B, cardinality)
+    # equality tails + its BSI slices — never the whole index
+    bound = 2 + (min(16, 8) + 3) + (min(16, 64) + 6)
     assert p_large <= bound
     assert p_large < len(large.store.logical) // 2
     assert large.stats()["esp_delta_programs"] == p_large
@@ -146,9 +146,9 @@ def test_zero_delta_pages_are_not_programmed():
     sched = _scheduler(table)
     before = sched.device.esp_programs
     # batch holds only value 0: pages c=1..3 keep their erased tails and
-    # slices #0/#1 have no set bits -> only __all + c=0 program
+    # slices #0/#1 have no set bits -> only __all + __valid + c=0 program
     pages = sched.append({"c": np.zeros(4, np.int64)})
-    assert pages == sched.device.esp_programs - before == 2
+    assert pages == sched.device.esp_programs - before == 3
 
 
 def test_projection_counts_delta_esp_programs():

@@ -1,0 +1,385 @@
+"""CRUD-lifecycle unit coverage: tombstone deletes, updates, compaction.
+
+The full-CRUD contract, asserted piece by piece:
+
+* the compiler splices the tombstone (``__valid``) page into EVERY plan
+  as exactly ONE extra sensed wordline — deleted rows can never appear
+  in a COUNT, MASK, or aggregate, and the reserved tail of a
+  ``reserve_rows`` store is masked out of NOT plans by the same page;
+* ``delete()`` programs one delta page, keeps every cached plan warm,
+  and refuses bad batches (out of range, duplicates, double deletes)
+  before any page state mutates; ``update()`` validates both halves
+  before either applies;
+* ``compact()`` is erase-unit-aware: it charges block erases + a full
+  ESP reprogram, restores append headroom (``capacity_rows``), and
+  surfaces write amplification through ``stats()``/``snapshot()``;
+* a rejected coalesced append must not poison already-queued batches on
+  either scheduler (the queue stays applyable after the raise);
+* empty telemetry sample sets summarize to ``None``/omitted quantiles
+  instead of raising (``percentile``, ``Histogram``, ``snapshot``,
+  ``latency_summary``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.planner import Planner
+from repro.query import (
+    VALID_PAGE,
+    Agg,
+    BatchScheduler,
+    BitmapStore,
+    Eq,
+    FlashDevice,
+    Histogram,
+    In,
+    Not,
+    Query,
+    Range,
+    Telemetry,
+    build_sharded_flashql,
+    lower,
+    percentile,
+)
+from repro.query.ast import and_ as qand
+from repro.query.compile import _lower
+from repro.query.oracle import np_select
+from repro.query.scheduler import plan_traffic
+
+from _hypothesis_compat import given, settings, st  # noqa: F401
+
+
+def _table(rng, n):
+    return {
+        "c": rng.integers(0, 6, n),
+        "v": rng.integers(0, 32, n),
+    }
+
+
+def _scheduler(table, reserve=64, planes=2, **kw):
+    store = BitmapStore()
+    store.ingest(table, reserve_rows=reserve)
+    dev = FlashDevice(num_planes=planes)
+    store.program(dev)
+    return BatchScheduler(dev, store, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the tombstone splice: one extra wordline, every plan, every aggregate
+# ---------------------------------------------------------------------------
+
+
+def test_valid_page_costs_exactly_one_extra_wordline():
+    """Acceptance criterion: the spliced tombstone page adds exactly ONE
+    sensed wordline to every plan vs the raw (unspliced) lowering."""
+    rng = np.random.default_rng(0)
+    store = BitmapStore()
+    store.ingest(_table(rng, 400), reserve_rows=32)
+    dev = FlashDevice(num_planes=1)
+    store.program(dev)
+    preds = [
+        Eq("c", 2),
+        In("c", [0, 3, 5]),
+        Range("v", 5, 20),
+        Not(Eq("c", 1)),
+        qand(Eq("c", 2), Not(Range("v", 0, 10))),
+    ]
+    for pred in preds:
+        spliced = Planner(dev.layout).compile(lower(pred, store))
+        raw = Planner(dev.layout).compile(_lower(pred, store))
+        assert (
+            plan_traffic(spliced)[1] == plan_traffic(raw)[1] + 1
+        ), pred
+
+
+def test_deleted_rows_never_match_any_aggregate():
+    rng = np.random.default_rng(1)
+    n = 500
+    table = _table(rng, n)
+    sched = _scheduler(table)
+    dead = rng.choice(n, 120, replace=False)
+    sched.delete(dead)
+    live = np.ones(n, bool)
+    live[dead] = False
+    for pred in (Eq("c", 3), Range("v", 0, 31), Not(Eq("c", 0))):
+        want = np_select(pred, table, n) & live
+        r_count, r_mask = sched.serve(
+            [Query(pred, agg=Agg.COUNT), Query(pred, agg=Agg.MASK)]
+        )
+        assert r_count.count == int(want.sum())
+        np.testing.assert_array_equal(
+            np.asarray(r_mask.mask.to_bits()).astype(bool), want
+        )
+
+
+def test_delete_keeps_plans_warm_and_programs_one_page():
+    rng = np.random.default_rng(2)
+    n = 300
+    table = _table(rng, n)
+    sched = _scheduler(table)
+    qs = [Query(Eq("c", 1)), Query(Range("v", 4, 9))]
+    sched.serve(qs)
+    misses = sched.compiler.misses
+    before = sched.device.esp_programs
+    pages = sched.delete(np.arange(0, 50))
+    assert pages == sched.device.esp_programs - before == 1
+    sched.serve(qs)
+    # the tombstone page carries no column region: no plan recompiles
+    assert sched.compiler.misses == misses
+
+
+def test_delete_validation_rejects_before_mutating():
+    rng = np.random.default_rng(3)
+    sched = _scheduler(_table(rng, 100))
+    with pytest.raises(ValueError, match="outside"):
+        sched.delete([5, 100])
+    with pytest.raises(ValueError, match="duplicate"):
+        sched.delete([5, 5])
+    with pytest.raises(ValueError, match="integers"):
+        sched.delete(np.array([1.5]))  # would truncate to row 1
+    sched.delete([5])
+    with pytest.raises(ValueError, match="already deleted"):
+        sched.delete([5, 6])
+    # the failed batches left no tombstones behind
+    assert sched.store.deleted_rows == 1
+    assert sched.stats()["rows_deleted"] == 1
+
+
+def test_update_validates_both_halves_first():
+    rng = np.random.default_rng(4)
+    n = 200
+    table = _table(rng, n)
+    sched = _scheduler(table)
+    with pytest.raises(ValueError, match="replacement"):
+        sched.update([1, 2, 3], {"c": np.array([1]), "v": np.array([2])})
+    with pytest.raises(ValueError):
+        sched.update([1, n + 5], {c: v[:2] for c, v in table.items()})
+    assert sched.store.deleted_rows == 0  # neither half applied
+    sched.update([1, 2], {"c": np.array([5, 5]), "v": np.array([7, 7])})
+    (r,) = sched.serve([Query(qand(Eq("c", 5), Eq("v", 7)))])
+    want = ((table["c"] == 5) & (table["v"] == 7))
+    want[[1, 2]] = False
+    assert r.count == int(want.sum()) + 2
+
+
+def test_compact_reclaims_capacity_and_charges_erases():
+    rng = np.random.default_rng(5)
+    n = 400
+    table = _table(rng, n)
+    sched = _scheduler(table, reserve=100)
+    cap = sched.store.capacity_rows
+    sched.delete(np.arange(0, 150))
+    assert sched.store.live_rows == n - 150
+    stats = sched.compact()
+    assert stats["rows_dropped"] == 150
+    assert stats["blocks_erased"] > 0
+    # headroom restored: same capacity, fewer resident rows
+    assert sched.store.capacity_rows == cap
+    assert sched.store.num_rows == n - 150
+    assert sched.store.deleted_rows == 0
+    # post-compact serving is bit-exact on the renumbered rows
+    live_table = {c: v[150:] for c, v in table.items()}
+    (r,) = sched.serve([Query(Eq("c", 2), agg=Agg.MASK)])
+    np.testing.assert_array_equal(
+        np.asarray(r.mask.to_bits()).astype(bool),
+        live_table["c"] == 2,
+    )
+    # the erase-unit costs are first-class telemetry
+    s = sched.stats()
+    assert s["compactions"] == 1 and s["block_erases"] > 0
+    assert s["write_amplification"] > 1.0
+    snap = sched.telemetry.snapshot()
+    assert snap["counters"]["block_erases"] == s["block_erases"]
+    assert snap["counters"]["words_programmed"] > snap["counters"].get(
+        "words_written", 0
+    )
+    proj = sched.projection()
+    assert proj["block_erases"] == s["block_erases"]
+    # wear is visible per block
+    assert snap["gauges"]["max_pec"] >= 1
+
+
+def test_auto_compaction_policy_fires_at_threshold():
+    rng = np.random.default_rng(6)
+    n = 200
+    sched = _scheduler(_table(rng, n), compact_density=0.3)
+    sched.delete(np.arange(0, 30))  # 15% < 30%: no compaction
+    assert sched.stats()["compactions"] == 0
+    sched.delete(np.arange(30, 70))  # 35% >= 30%: compacts
+    assert sched.stats()["compactions"] == 1
+    assert sched.store.num_rows == n - 70
+
+
+def test_grow_on_overflow_rides_the_rebuild():
+    rng = np.random.default_rng(7)
+    n = 100
+    table = _table(rng, n)
+    sched = _scheduler(table, reserve=4, grow_on_overflow=True)
+    big = _table(rng, 300)
+    sched.append(big)  # overflows the 4-row reserve -> grow + retry
+    assert sched.stats()["compactions"] == 1
+    merged = {c: np.concatenate([v, big[c]]) for c, v in table.items()}
+    (r,) = sched.serve([Query(Eq("c", 0))])
+    assert r.count == int((merged["c"] == 0).sum())
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: reserved tail rows never leak into NOT/MASK plans
+# ---------------------------------------------------------------------------
+
+
+def test_not_plan_cached_before_append_stays_exact():
+    """Differential regression: compile-and-cache a NOT plan on a store
+    with reserve_rows headroom, append rows, re-serve the SAME plan — no
+    row >= num_rows (at either point) may leak into COUNT or MASK."""
+    rng = np.random.default_rng(8)
+    n = 150
+    table = _table(rng, n)
+    for sq_builder in (
+        lambda: _scheduler(table, reserve=128),
+        lambda: build_sharded_flashql(
+            dict(table), 2, num_planes=1, reserve_rows=128
+        ),
+    ):
+        sched = sq_builder()
+        pred = Not(Eq("c", 2))
+        (r0,) = sched.serve([Query(pred, agg=Agg.MASK)])
+        bits0 = np.asarray(r0.mask.to_bits()).astype(bool)
+        assert bits0.shape[0] == n
+        np.testing.assert_array_equal(bits0, table["c"] != 2)
+        batch = _table(rng, 40)
+        sched.append(batch)
+        merged = {c: np.concatenate([v, batch[c]]) for c, v in table.items()}
+        r1, r2 = sched.serve(
+            [Query(pred, agg=Agg.MASK), Query(pred, agg=Agg.COUNT)]
+        )
+        bits1 = np.asarray(r1.mask.to_bits()).astype(bool)
+        assert bits1.shape[0] == n + 40
+        np.testing.assert_array_equal(bits1, merged["c"] != 2)
+        assert r2.count == int((merged["c"] != 2).sum())
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: a rejected coalesced append never poisons queued batches
+# ---------------------------------------------------------------------------
+
+
+def test_rejected_coalesced_append_leaves_queue_applyable():
+    rng = np.random.default_rng(9)
+    n = 100
+    table = _table(rng, n)
+
+    def check(sched, sq=False):
+        good1 = _table(rng, 5)
+        sched.append(good1)
+        # cumulative batch would overflow the reserve: rejected
+        with pytest.raises(ValueError, match="overflows"):
+            sched.append(_table(rng, 5000))
+        # schema violation in the cumulative batch: rejected
+        with pytest.raises(ValueError):
+            sched.append({"c": np.array([1]), "wrong": np.array([2])})
+        good2 = _table(rng, 5)
+        sched.append(good2)
+        assert sched.appends_queued == 2
+        sched.apply_appends()
+        assert sched.appends_queued == 0
+        merged = {
+            c: np.concatenate([v, good1[c], good2[c]])
+            for c, v in table.items()
+        }
+        res = sched.serve([Query(Eq("c", 1), agg=Agg.MASK)])
+        bits = np.asarray(res[0].mask.to_bits()).astype(bool)
+        np.testing.assert_array_equal(bits, merged["c"] == 1)
+
+    check(_scheduler(table, reserve=32, coalesce_appends=True))
+    check(
+        build_sharded_flashql(
+            dict(table),
+            2,
+            num_planes=1,
+            reserve_rows=32,
+            coalesce_appends=True,
+        ),
+        sq=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: empty sample sets summarize, never raise
+# ---------------------------------------------------------------------------
+
+
+def test_empty_samples_summarize_without_raising():
+    assert percentile([], 50) is None
+    assert Histogram().summary() == {"count": 0}
+    tele = Telemetry()
+    tele.hists["empty"] = Histogram()
+    snap = tele.snapshot()  # must stay total on a fresh registry
+    assert snap["histograms"]["empty"] == {"count": 0}
+    h = Histogram(capacity=4)
+    h.observe(1.0)
+    s = h.summary()
+    assert s["count"] == 1 and s["p50"] == 1.0  # non-empty keeps quantiles
+
+    import importlib.util
+    import pathlib
+
+    spec = importlib.util.spec_from_file_location(
+        "_harness",
+        pathlib.Path(__file__).parent.parent / "benchmarks" / "_harness.py",
+    )
+    harness = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(harness)
+    assert harness.latency_summary([]) is None
+    assert harness.latency_summary([0.5]) == {
+        "p50": 0.5,
+        "p95": 0.5,
+        "mean": 0.5,
+        "n": 1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# sharded lifecycle units (the differential stream lives in
+# tests/test_query_differential.py)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_partial_compaction_rebuilds_only_tombstoned_stripes():
+    rng = np.random.default_rng(10)
+    n = 240
+    table = _table(rng, n)
+    sq = build_sharded_flashql(dict(table), 3, num_planes=1, reserve_rows=32)
+    # roundrobin: rows 0,3,6,… live on stripe 0 — tombstone only those
+    sq.delete(np.arange(0, 60, 3))
+    pre = [d.store.epoch for d in sq.devices]
+    touched = [s.deleted_rows > 0 for s in sq.store.shards]
+    assert touched == [True, False, False]
+    stats = sq.compact()
+    assert stats["shards_rebuilt"] == 1
+    post = [d.store.epoch for d in sq.devices]
+    assert post[0] > pre[0]
+    assert post[1:] == pre[1:]  # untouched stripes: epochs never move
+    live = np.ones(n, bool)
+    live[np.arange(0, 60, 3)] = False
+    (r,) = sq.serve([Query(Eq("c", 1), agg=Agg.MASK)])
+    np.testing.assert_array_equal(
+        np.asarray(r.mask.to_bits()).astype(bool),
+        (table["c"] == 1)[live],
+    )
+
+
+def test_mutations_refused_while_tickets_in_flight():
+    rng = np.random.default_rng(11)
+    table = _table(rng, 100)
+    sq = build_sharded_flashql(dict(table), 2, num_planes=1, reserve_rows=16)
+    sq.submit(Query(Eq("c", 1)))
+    for call in (
+        lambda: sq.delete([0]),
+        lambda: sq.update([0], {c: v[:1] for c, v in table.items()}),
+        lambda: sq.compact(),
+    ):
+        with pytest.raises(RuntimeError, match="in flight"):
+            call()
+    sq.flush()
+    sq.delete([0])  # drained fleet: fine
