@@ -295,6 +295,40 @@ class MaskAggregator(Aggregator):
         return BitVector(packed, sstore.num_rows)
 
 
+def merge_mask_batch(parts_list, sstore) -> list:
+    """Un-stripe a whole flush's MASK tickets in one fused numpy pass.
+
+    ``parts_list`` holds each MASK ticket's shard partials (the dicts
+    :meth:`MaskAggregator.merge` takes).  The per-ticket merge pays an
+    unpack/scatter pass per (ticket x shard) plus a packbits per ticket;
+    here every shard's words stack across tickets first, so the flush
+    costs ONE unpackbits + scatter per shard and ONE packbits total —
+    the dominant host-side cost of MASK-heavy sharded flushes.
+    Returns one :class:`BitVector` per ticket, in ``parts_list`` order.
+    """
+    t_count = len(parts_list)
+    bits = np.zeros((t_count, sstore.num_rows), dtype=np.uint8)
+    shards = sorted({s for parts in parts_list for s in parts})
+    for s in shards:
+        n_s = sstore.shards[s].num_rows
+        rows = [t for t in range(t_count) if s in parts_list[t]]
+        words = np.ascontiguousarray(
+            np.stack([np.asarray(parts_list[t][s]) for t in rows])
+        )
+        unpacked = np.unpackbits(
+            words.view(np.uint8), axis=1, bitorder="little"
+        )[:, :n_s]
+        bits[
+            np.asarray(rows, np.intp)[:, None],
+            sstore.row_maps[s][None, :],
+        ] = unpacked
+    pad = (sstore.num_rows + 31) // 32 * 32
+    span = np.zeros((t_count, pad), dtype=np.uint8)
+    span[:, : sstore.num_rows] = bits
+    packed = np.packbits(span, axis=1, bitorder="little").view(np.uint32)
+    return [BitVector(packed[t], sstore.num_rows) for t in range(t_count)]
+
+
 class SumAggregator(Aggregator):
     kind = "sum"
 

@@ -108,6 +108,133 @@ def _flatten(cls, items) -> tuple["Pred", ...]:
     return tuple(out)
 
 
+def pred_key(pred: Pred) -> tuple:
+    """Total-order-comparable structural key of a predicate.
+
+    Two predicates are structurally equal iff their keys are equal, and
+    keys of sibling predicates always compare (same-kind keys share a
+    tuple shape; cross-kind comparison resolves on the leading tag), so
+    :func:`canonicalize` can sort And/Or children deterministically.
+    """
+    if isinstance(pred, Eq):
+        return ("eq", pred.column, int(pred.value))
+    if isinstance(pred, In):
+        return ("in", pred.column) + tuple(int(v) for v in pred.values)
+    if isinstance(pred, Range):
+        return (
+            "range",
+            pred.column,
+            (1, int(pred.lo)) if pred.lo is not None else (0, 0),
+            (1, int(pred.hi)) if pred.hi is not None else (0, 0),
+        )
+    if isinstance(pred, Not):
+        return ("not", pred_key(pred.child))
+    if isinstance(pred, (And, Or)):
+        tag = "and" if isinstance(pred, And) else "or"
+        return (tag,) + tuple(pred_key(c) for c in pred.children)
+    raise TypeError(f"not a FlashQL predicate: {pred!r}")
+
+
+def pred_size(pred: Pred) -> int:
+    """Approximate lowered size of a predicate (CSE candidate ordering).
+
+    ``Range``/``In`` leaves weigh more than ``Eq``: they lower to
+    multi-page expressions (BSI comparison networks / member-page ORs),
+    so a shared ``Range`` is worth more than its single AST node suggests.
+    """
+    if isinstance(pred, Not):
+        return 1 + pred_size(pred.child)
+    if isinstance(pred, (And, Or)):
+        return 1 + sum(pred_size(c) for c in pred.children)
+    if isinstance(pred, Range):
+        return 3
+    if isinstance(pred, In):
+        return 2
+    return 1
+
+
+def iter_subtrees(pred: Pred):
+    """Yield ``pred`` and every nested predicate subtree (pre-order)."""
+    yield pred
+    if isinstance(pred, Not):
+        yield from iter_subtrees(pred.child)
+    elif isinstance(pred, (And, Or)):
+        for c in pred.children:
+            yield from iter_subtrees(c)
+
+
+def canonicalize(pred: Pred) -> Pred:
+    """Canonical form: structurally equal-modulo-commutativity predicates
+    become *identical* (equal ``pred_key``, equal hash).
+
+    Bit-exact rewrites only — And/Or are commutative, associative, and
+    idempotent over row sets, and every rule below is one of those:
+
+    * And/Or chains flatten (constructors already do) and their children
+      sort by :func:`pred_key`;
+    * duplicate children dedupe (``a & a`` -> ``a``);
+    * double negation collapses (``~~a`` -> ``a``);
+    * single-child And/Or unwrap to the child;
+    * sibling ``Eq``/``In`` literals on one column inside an ``Or`` merge
+      into one ``In`` (plain member-page OR either way), and a one-value
+      ``In`` is an ``Eq``.
+
+    The compiler keys its plan cache on the canonicalized predicate, so
+    ``Eq(a) & Eq(b)`` and ``Eq(b) & Eq(a)`` share one cache entry — and
+    one sensing when they meet in a flush.
+    """
+    if isinstance(pred, Eq):
+        return pred
+    if isinstance(pred, In):
+        if len(pred.values) == 1:
+            return Eq(pred.column, pred.values[0])
+        return pred
+    if isinstance(pred, Range):
+        return pred
+    if isinstance(pred, Not):
+        c = canonicalize(pred.child)
+        if isinstance(c, Not):
+            return c.child
+        return Not(c)
+    if not isinstance(pred, (And, Or)):
+        raise TypeError(f"not a FlashQL predicate: {pred!r}")
+    cls = type(pred)
+    kids: list[Pred] = []
+    for ch in pred.children:
+        cc = canonicalize(ch)
+        if isinstance(cc, cls):
+            kids.extend(cc.children)  # Not-collapse can surface same-class
+        else:
+            kids.append(cc)
+    if cls is Or:
+        # merge per-column value literals: Eq(c,1) | Eq(c,2) == In(c,(1,2))
+        by_col: dict[str, set[int]] = {}
+        rest: list[Pred] = []
+        for k in kids:
+            if isinstance(k, Eq):
+                by_col.setdefault(k.column, set()).add(k.value)
+            elif isinstance(k, In):
+                by_col.setdefault(k.column, set()).update(k.values)
+            else:
+                rest.append(k)
+        for col, vals in by_col.items():
+            rest.append(
+                Eq(col, next(iter(vals)))
+                if len(vals) == 1
+                else In(col, vals)
+            )
+        kids = rest
+    seen: dict[tuple, Pred] = {}
+    for k in kids:
+        seen.setdefault(pred_key(k), k)
+    ordered = [seen[key] for key in sorted(seen)]
+    if not ordered:
+        return pred
+    if len(ordered) == 1:
+        return ordered[0]
+    return cls(tuple(ordered))
+
+
 def columns_of(pred: Pred):
     """Yield every column name a predicate references (with repeats)."""
     if isinstance(pred, (Eq, In, Range)):

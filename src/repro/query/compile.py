@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.commands import CommandPlan
+from repro.core.engine import eval_expr
 from repro.core.expr import Expr, Node, Page, and_, leaves, not_, or_
 from repro.core.placement import auto_layout
 from repro.core.planner import Planner
@@ -62,7 +63,18 @@ from repro.query.aggregate import (
     payload_spec,
     unpack_group,
 )
-from repro.query.ast import And, Eq, In, Not, Or, Pred, Query, Range
+from repro.query.ast import (
+    And,
+    Eq,
+    In,
+    Not,
+    Or,
+    Pred,
+    Query,
+    Range,
+    canonicalize,
+    pred_key,
+)
 from repro.query.bitmap import (
     FALSE_PAGE,
     TRUE_PAGE,
@@ -72,6 +84,7 @@ from repro.query.bitmap import (
     eq_page,
 )
 from repro.query.device import group_execs, make_flush_runner
+from repro.query.optimize import best_plan
 
 
 def _le_expr(store: BitmapStore, column: str, c: int) -> Expr:
@@ -175,6 +188,52 @@ def _lower(pred: Pred, store: BitmapStore) -> Expr:
     raise TypeError(f"not a FlashQL predicate: {pred!r}")
 
 
+def lower_shared(
+    pred: Pred,
+    store: BitmapStore,
+    shared: dict[tuple, str],
+    used: set[str],
+) -> Expr:
+    """Lower a predicate, substituting shared-subexpression pages.
+
+    ``shared`` maps :func:`repro.query.ast.pred_key` keys to the page
+    names holding (or standing in for) those subtrees' results — the
+    cross-query CSE rewrite of :func:`repro.query.optimize.cse_flush`.
+    Every substituted name is added to ``used``.  The root is spliced
+    with the valid page exactly like :func:`lower`.
+    """
+    e = _lower_shared(pred, store, shared, used)
+    if isinstance(e, Page):
+        if e.name == FALSE_PAGE:
+            return e
+        if e.name == TRUE_PAGE:
+            return Page(VALID_PAGE)
+    return and_(e, Page(VALID_PAGE))
+
+
+def _lower_shared(
+    pred: Pred,
+    store: BitmapStore,
+    shared: dict[tuple, str],
+    used: set[str],
+) -> Expr:
+    name = shared.get(pred_key(pred))
+    if name is not None:
+        used.add(name)
+        return Page(name)
+    if isinstance(pred, Not):
+        return not_(_lower_shared(pred.child, store, shared, used))
+    if isinstance(pred, And):
+        return and_(
+            *(_lower_shared(c, store, shared, used) for c in pred.children)
+        )
+    if isinstance(pred, Or):
+        return or_(
+            *(_lower_shared(c, store, shared, used) for c in pred.children)
+        )
+    return _lower(pred, store)
+
+
 def expr_key(e: Expr) -> tuple:
     """Canonical structural key of a core expression."""
     if isinstance(e, Page):
@@ -190,18 +249,57 @@ class CompiledQuery:
     plan: CommandPlan
     key: tuple
     cache_hit: bool
+    # canonicalized predicate (optimizer on) — the structural identity
+    # cross-query CSE and materialization key on; None when optimize=False
+    canon: Pred | None = None
 
 
 @dataclass
 class QueryCompiler:
-    """Lower + plan queries against one array, memoizing command plans."""
+    """Lower + plan queries against one array, memoizing command plans.
+
+    With ``optimize`` (the default), three optimizer stages run in the
+    compile path:
+
+    * predicates canonicalize (:func:`repro.query.ast.canonicalize`)
+      before lowering, so operand-order variants of one predicate share a
+      single plan-cache entry;
+    * plan-cache misses compile a small set of candidate chain orderings
+      and keep the cheapest under the flashsim timing model
+      (:func:`repro.query.optimize.best_plan`);
+    * predicates hot enough (``materialize_after`` compiles since the last
+      mutation of their columns) have their result bitmap ESP-programmed
+      once as a cached page (:meth:`materialize`), after which they lower
+      to ``mat_page AND valid_page`` — one sensing, two wordlines.  The
+      cache entry is guarded by the source columns' region epochs plus the
+      store's row count, so appends/compaction invalidate it, while
+      deletes need no invalidation at all: the live ``__valid`` tombstone
+      page is composed at read time, never baked into the cached bitmap.
+    """
 
     store: BitmapStore
     array: "object"  # FlashArray / FlashDevice (duck-typed: .layout)
     _plans: dict[tuple, CommandPlan] = field(default_factory=dict)
     hits: int = 0
     misses: int = 0
+    optimize: bool = True
+    # compiles of one canonical predicate before it is eligible for
+    # materialization (heat resets when its cached page is invalidated);
+    # None disables the stage
+    materialize_after: int | None = None
+    mat_limit: int = 32  # distinct materialized pages per device
+    mat_hits: int = 0
+    mat_invalidations: int = 0
+    mat_builds: int = 0
     _live_versions: tuple | None = None
+    # canonical-predicate heat: pred_key -> [compile count, canon pred]
+    _heat: dict = field(default_factory=dict, repr=False)
+    # live materializations: pred_key -> (page name, regions, guard)
+    _mat: dict = field(default_factory=dict, repr=False)
+    # stable page name per materialized predicate (re-materializing after
+    # invalidation reprograms the same page in place, so cached plans that
+    # gather its slot stay valid)
+    _mat_names: dict = field(default_factory=dict, repr=False)
     # front cache keyed on the (frozen, hashable) Query itself: repeated
     # queries skip lowering + structural keying entirely, not just the
     # Planner.  Cleared whenever either content version moves (cheap to
@@ -251,8 +349,15 @@ class QueryCompiler:
         cached = self._by_query.get(query)
         if cached is not None:
             self.hits += 1
+            self._note_heat(cached.canon)
             return cached
-        expr = lower(query.where, self.store)
+        if self.optimize:
+            canon = canonicalize(query.where)
+            self._note_heat(canon)
+            expr = self._lower_optimized(canon)
+        else:
+            canon = None
+            expr = lower(query.where, self.store)
         layout = self.array.layout
         if any(p.name not in layout for p in leaves(expr)):
             # late-placed pages (e.g. constants written after warmup) get
@@ -275,9 +380,15 @@ class QueryCompiler:
         else:
             self.misses += 1
             tele = self.telemetry
-            if tele is not None and tele.enabled:
-                t0 = time.perf_counter()
+            timed = tele is not None and tele.enabled
+            t0 = time.perf_counter() if timed else 0.0
+            if self.optimize:
+                # candidate chain orderings, cheapest by the flashsim
+                # timing model; the cache key stays the canonical expr's
+                plan, _, _ = best_plan(expr, layout)
+            else:
                 plan = Planner(layout).compile(expr)
+            if timed:
                 t1 = time.perf_counter()
                 tele.observe("plan_compile_s", t1 - t0)
                 tele.span(
@@ -288,14 +399,113 @@ class QueryCompiler:
                     tid="compile",
                     args={"key": repr(key[0])},
                 )
-            else:
-                plan = Planner(layout).compile(expr)
             self._plans[key] = plan
-        cq = CompiledQuery(query, expr, plan, key, hit)
+        cq = CompiledQuery(query, expr, plan, key, hit, canon)
         if len(self._by_query) >= 4096:  # bound high-cardinality params
             self._by_query.clear()
         self._by_query[query] = replace(cq, cache_hit=True)
         return cq
+
+    # -- hot-predicate materialization -----------------------------------
+
+    def _note_heat(self, canon: Pred | None) -> None:
+        if canon is None or self.materialize_after is None:
+            return
+        k = pred_key(canon)
+        rec = self._heat.get(k)
+        if rec is None:
+            if len(self._heat) >= 4096:  # bound high-cardinality params
+                self._heat.clear()
+            self._heat[k] = [1, canon]
+        else:
+            rec[0] += 1
+
+    def _mat_guard(self, regions: tuple[str, ...]) -> tuple:
+        # region epochs catch column mutations and compaction; the row
+        # count catches appends (which extend pages without bumping any
+        # region epoch — a stale cached bitmap would zero-miss new rows).
+        # Deletes bump neither: the cached page composes with the live
+        # valid page at read time, so tombstones need no invalidation.
+        return (self.epoch_sig(regions), self.store.num_rows)
+
+    def _lower_optimized(self, canon: Pred) -> Expr:
+        """Lower a canonical predicate, via its materialized page if the
+        cache entry exists and its guard is still current."""
+        k = pred_key(canon)
+        m = self._mat.get(k)
+        if m is not None:
+            name, regions, guard = m
+            if guard == self._mat_guard(regions):
+                self.mat_hits += 1
+                if self.telemetry is not None:
+                    self.telemetry.count("materialization_hits")
+                return and_(Page(name), Page(VALID_PAGE))
+            del self._mat[k]
+            self.mat_invalidations += 1
+            if self.telemetry is not None:
+                self.telemetry.count("materialization_invalidations")
+            rec = self._heat.get(k)
+            if rec is not None:
+                rec[0] = 0  # re-earn the threshold after invalidation
+        return lower(canon, self.store)
+
+    def hot_preds(self) -> list[tuple[tuple, Pred]]:
+        """``(key, canon)`` for predicates past the heat threshold that
+        are not currently materialized."""
+        if self.materialize_after is None:
+            return []
+        return [
+            (k, rec[1])
+            for k, rec in self._heat.items()
+            if rec[0] >= self.materialize_after and k not in self._mat
+        ]
+
+    def materialize(self, key: tuple, canon: Pred) -> CommandPlan | None:
+        """Evaluate + ESP-program a predicate's bitmap as a cached page.
+
+        Returns the predicate's build plan — the one sensing pass that
+        physically produces the latch result being programmed — so the
+        caller can charge its traffic; None when the predicate is not
+        worth (or not able to be) materialized.  The page is co-located
+        with the valid page when its block has room, making the lowered
+        ``mat AND valid`` read a single intra-block sensing.
+        """
+        expr = _lower(canon, self.store)
+        if isinstance(expr, Page):
+            return None  # already one page — nothing to gain
+        pages = sorted(set(leaves(expr)), key=lambda p: p.name)
+        regions = tuple(
+            sorted({page_region(p.name) for p in pages} - {None})
+        )
+        name = self._mat_names.get(key)
+        if name is None:
+            if len(self._mat_names) >= self.mat_limit:
+                return None
+            name = f"__mat{len(self._mat_names)}"
+        layout = self.array.layout
+        if any(p.name not in layout for p in pages):
+            auto_layout(expr, layout)
+        snap = layout.snapshot()
+        plan = Planner(layout).compile(expr)
+        layout.restore(snap)  # build-plan spill scratch is throwaway
+        words = np.asarray(
+            eval_expr(expr, self.store.logical), dtype=np.uint32
+        )
+        block = wordline = None
+        if name not in layout and VALID_PAGE in layout:
+            pv = layout[VALID_PAGE]
+            fill = layout._block_fill.get(pv.block, 0)
+            if fill < layout.wls_per_block:
+                block, wordline = pv.block, fill
+        self.array.fc_write(
+            name, words, esp=True, block=block, wordline=wordline
+        )
+        self._mat_names[key] = name
+        self._mat[key] = (name, regions, self._mat_guard(regions))
+        self.mat_builds += 1
+        if self.telemetry is not None:
+            self.telemetry.count("materializations")
+        return plan
 
     def exec_for(self, cq: CompiledQuery):
         """The lowered :class:`repro.query.device.ExecPlan` of a compiled
@@ -331,22 +541,33 @@ class FlushProgram:
     every flush with zero host-side preparation.
     """
 
-    key: tuple  # flush signature: (sense groups, reduce groups, words)
-    runner: object  # jitted run(data, group_idxs, inv_perm, mask, sels, extras)
+    key: tuple  # flush signature: (sense groups, reduce groups, words, cse)
+    runner: object  # jitted run(data, group_idxs, inv_perm, mask, sels, extras, cse_idxs)
     n_members: int
     n_sense_groups: int
     n_reduce_groups: int
     group_idxs: tuple  # per sense group: tuple of (B_g, blocks, wls) arrays
-    inv_perm: jax.Array  # (B,) int32: concat order -> member order
+    # (B,) int32 member gather over the sensed rows: with whole-plan dedup
+    # it maps each member onto its unique representative's row (duplicate
+    # queries read one sensing's output), without dedup it is the plain
+    # concat-order -> member-order inverse permutation
+    inv_perm: jax.Array
     sels: tuple  # per reduce group: (B_r,) member gather, or None if all
     extras: tuple  # per reduce group: (B_r, P, W) plane stack, or None
     reduce_parse: tuple  # per reduce group: (member tuple, payload leaves)
     extra_counts: tuple  # per member: extra planes sensed (traffic accounting)
+    cse_idxs: tuple = ()  # per shared plan: tuple of (blocks, wls) arrays
 
     def run(self, data: jax.Array, mask: jax.Array) -> jax.Array:
         """Dispatch the fused program (async); returns the device payload."""
         return self.runner(
-            data, self.group_idxs, self.inv_perm, mask, self.sels, self.extras
+            data,
+            self.group_idxs,
+            self.inv_perm,
+            mask,
+            self.sels,
+            self.extras,
+            self.cse_idxs,
         )
 
     def unpack(self, flat: np.ndarray, aggs: list) -> list:
@@ -378,6 +599,8 @@ def compile_flush(
     extras_cache: dict,
     pad: bool = True,
     cache_cap: int = 128,
+    dedup_keys: list | None = None,
+    shared_execs: tuple = (),
 ) -> FlushProgram:
     """Compile one flush into a :class:`FlushProgram`.
 
@@ -388,18 +611,45 @@ def compile_flush(
     across flushes through ``runner_cache`` keyed on the flush signature,
     so a recurring composition costs zero retraces; extra-plane stacks are
     memoized in ``extras_cache`` exactly like the legacy reduce driver.
+
+    ``dedup_keys`` (one hashable per member — plan-cache keys in practice)
+    turns on whole-plan dedup: only the first member of each key is
+    sensed, and the member gather points duplicates at the
+    representative's row.  ``shared_execs`` are the flush's cross-query
+    shared subexpression plans (:func:`repro.query.optimize.cse_flush`),
+    sensed once before the member groups; member execs reference their
+    stacked results through ``_Step.shared`` substitutions.
     """
     assert all(e is not None for e in execs), "fused flush needs lowered plans"
     n = len(execs)
+    if dedup_keys is not None:
+        pos: dict = {}
+        uix: list[int] = []
+        urep: list[int] = []
+        for i, k in enumerate(dedup_keys):
+            j = pos.get(k)
+            if j is None:
+                j = pos[k] = len(uix)
+                uix.append(i)
+            urep.append(j)
+        uexecs = [execs[i] for i in uix]
+    else:
+        uix = list(range(n))
+        urep = list(range(n))
+        uexecs = execs
     sense: list[tuple] = []
     group_idxs: list[tuple] = []
     order: list[int] = []
-    for signature, members, stacked in group_execs(execs, pad=pad):
+    for signature, members, stacked in group_execs(uexecs, pad=pad):
         sense.append((signature, len(members)))
         group_idxs.append(tuple(jnp.asarray(x) for x in stacked))
         order.extend(members)
-    inv = np.empty(n, dtype=np.int32)
-    inv[np.asarray(order)] = np.arange(n, dtype=np.int32)
+    # row_of: unique-plan ordinal -> its row in the concatenated group
+    # output; composing with urep gives the member gather (duplicates
+    # share their representative's row)
+    row_of = np.empty(len(uexecs), dtype=np.int32)
+    row_of[np.asarray(order)] = np.arange(len(uexecs), dtype=np.int32)
+    inv = row_of[np.asarray(urep, dtype=np.int32)]
 
     aggs, rgroups = group_members(specs, stores)
     reduce_sigs: list[tuple] = []
@@ -425,7 +675,8 @@ def compile_flush(
         extras.append(ex)
         parse.append((tuple(members), payload_spec(kind, sig, len(members), words)))
 
-    key = (tuple(sense), tuple(reduce_sigs), words)
+    cse = tuple(e.signature for e in shared_execs)
+    key = (tuple(sense), tuple(reduce_sigs), words, cse)
     # interpret is baked into the traced program, so it joins the cache
     # key: a (hand-built) fleet mixing interpret modes must not share
     # runners across its devices
@@ -448,4 +699,7 @@ def compile_flush(
         extras=tuple(extras),
         reduce_parse=tuple(parse),
         extra_counts=tuple(extra_counts),
+        cse_idxs=tuple(
+            tuple(jnp.asarray(x) for x in e.idxs) for e in shared_execs
+        ),
     )

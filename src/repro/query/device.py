@@ -72,6 +72,10 @@ class _Step:
     # gathered cube rows replaced by device-resident spilled values; the
     # positions are static, so spilling plans stay pure array programs
     subs: tuple[tuple[int, int, int], ...] = ()
+    # "mws": (block_pos, wordline_pos, shared ordinal) substitutions into
+    # the flush-level shared-value stack (cross-query CSE): the row is a
+    # latch result another plan in the same flush already sensed
+    shared: tuple[tuple[int, int, int], ...] = ()
     ordinal: int = 0  # "spill": index into the plan's scratch values
 
 
@@ -201,17 +205,21 @@ def reorder_rows(pieces: list[jax.Array], order: list[int]) -> jax.Array:
 
 
 def plan_step_fn(signature: tuple[_Step, ...], interpret: bool):
-    """Pure single-plan executor for one signature: ``run_one(data, *idxs)``.
+    """Pure single-plan executor for one signature:
+    ``run_one(data, shared, *idxs)``.
 
     The traced body shared by :func:`make_plan_runner` (standalone jitted
     vmap) and :func:`make_flush_runner` (inlined into the fused flush
     program).  ``"spill"`` steps park the latch value in a plan-local
     scratch list; MWS steps with substitutions splice those values into the
     gathered cube at static positions (device-resident scratch — spilling
-    plans never touch the store).
+    plans never touch the store).  ``shared`` is the flush-level CSE value
+    stack (``(K, words)`` or None): MWS steps carrying ``shared``
+    substitutions splice those rows in the same way, fanning one sensing's
+    latch result out to every plan that references it.
     """
 
-    def run_one(data: jax.Array, *idxs: jax.Array) -> jax.Array:
+    def run_one(data: jax.Array, shared, *idxs: jax.Array) -> jax.Array:
         s = c = out = None
         scratch: list[jax.Array] = []
         it = iter(idxs)
@@ -220,6 +228,8 @@ def plan_step_fn(signature: tuple[_Step, ...], interpret: bool):
                 cube = data[next(it)]  # (blocks, wordlines, words)
                 for bi, wi, o in st.subs:
                     cube = cube.at[bi, wi].set(scratch[o])
+                for bi, wi, k in st.shared:
+                    cube = cube.at[bi, wi].set(shared[k])
                 raw = fused_block_reduce(
                     cube, st.inverse, interpret=interpret
                 )
@@ -263,40 +273,59 @@ def make_plan_runner(
     if shard_data:
         return jax.jit(
             jax.vmap(
-                lambda data, si, *ix: run_one(data[si], *ix),
+                lambda data, si, *ix: run_one(data[si], None, *ix),
                 in_axes=(None, 0) + (0,) * n_mws,
             )
         )
-    return jax.jit(jax.vmap(run_one, in_axes=(None,) + (0,) * n_mws))
+    return jax.jit(
+        jax.vmap(
+            lambda data, *ix: run_one(data, None, *ix),
+            in_axes=(None,) + (0,) * n_mws,
+        )
+    )
 
 
 def make_flush_runner(key: tuple, interpret: bool):
     """Build the single jitted program executing a whole flush signature.
 
-    ``key`` is the flush signature: ``(sense, reduce, w)`` where ``sense``
-    is a tuple of ``(plan signature, member count)`` per vmap group,
-    ``reduce`` a tuple of ``(aggregator kind, reduce_sig, member count,
-    extra-plane count)`` per reduce group, and ``w`` the store's logical
-    word count.  The returned ``run(data, group_idxs, inv_perm, mask,
-    sels, extras)`` fuses EVERYTHING a flush does device-side — per-group
-    gather + latch algebra, the order-restoring inverse permutation,
-    validity masking, and every aggregate's (weighted-)popcount reduce —
-    and returns ONE flat ``uint32`` payload (see
+    ``key`` is the flush signature: ``(sense, reduce, w, cse)`` where
+    ``sense`` is a tuple of ``(plan signature, member count)`` per vmap
+    group, ``reduce`` a tuple of ``(aggregator kind, reduce_sig, member
+    count, extra-plane count)`` per reduce group, ``w`` the store's logical
+    word count, and ``cse`` a tuple of shared-plan signatures — the
+    cross-query common subexpressions this flush senses ONCE and splices
+    into every member plan that references them.  The returned
+    ``run(data, group_idxs, inv_perm, mask, sels, extras, cse_idxs)``
+    fuses EVERYTHING a flush does device-side — the shared sensings, the
+    per-group gather + latch algebra, the member-order-restoring gather
+    (``inv_perm`` maps members onto deduplicated unique-plan rows, so two
+    queries with one predicate read one sensing's row twice), validity
+    masking, and every aggregate's (weighted-)popcount reduce — and
+    returns ONE flat ``uint32`` payload (see
     :func:`repro.query.aggregate.unpack_group`): one kernel dispatch and
     one host transfer per flush, however many signature groups and
     aggregate kinds it mixes.
     """
     from repro.query.aggregate import kind_reduce
 
-    sense, reduce_sigs, w = key
+    sense, reduce_sigs, w, cse = key
 
-    def run(data, group_idxs, inv_perm, mask, sels, extras):
+    def run(data, group_idxs, inv_perm, mask, sels, extras, cse_idxs):
+        shared = None
+        if cse:
+            # shared subexpressions first: K is small, so these run as
+            # plain (unvmapped) plans; members gather their rows below
+            vals = [
+                plan_step_fn(psig, interpret)(data, None, *idxs)
+                for psig, idxs in zip(cse, cse_idxs)
+            ]
+            shared = jnp.stack(vals)
         pieces = []
         for (psig, _n), idxs in zip(sense, group_idxs):
             one = plan_step_fn(psig, interpret)
             n_mws = len(idxs)
-            out = jax.vmap(one, in_axes=(None,) + (0,) * n_mws)(
-                data, *idxs
+            out = jax.vmap(one, in_axes=(None, None) + (0,) * n_mws)(
+                data, shared, *idxs
             )
             pieces.append(out[:, :w])
         allout = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
@@ -354,7 +383,12 @@ class FlashDevice(FlashArray):
         self.last_eager_plans = 0
 
     # -- plan lowering -----------------------------------------------------
-    def build_exec(self, plan: CommandPlan) -> ExecPlan | None:
+    def build_exec(
+        self,
+        plan: CommandPlan,
+        shared: dict[str, int] | None = None,
+        layout=None,
+    ) -> ExecPlan | None:
         """Lower a plan (spilling or not) to a batchable ExecPlan.
 
         Spill commands lower to ``"spill"`` steps whose values stay
@@ -362,7 +396,15 @@ class FlashDevice(FlashArray):
         record a static substitution instead of a store slot, so the whole
         plan — deep-range chains included — is a pure function of the
         packed snapshot and joins the fused/vmap execution paths.
+
+        ``shared`` maps virtual CSE page names to ordinals in the flush's
+        shared-value stack: sensing one records a ``shared`` substitution
+        instead of a store slot (the value is another plan's latch result,
+        resident only inside the fused program).  ``layout`` overrides the
+        device layout for name resolution — CSE member plans compile
+        against a fork that additionally places the virtual pages.
         """
+        lay = self.layout if layout is None else layout
         steps: list[_Step] = []
         idxs: list[np.ndarray] = []
         scratch_ord: dict[str, int] = {}
@@ -374,12 +416,16 @@ class FlashDevice(FlashArray):
                     (len(cmd.targets), n_max), IDENTITY_SLOT, dtype=np.int32
                 )
                 subs: list[tuple[int, int, int]] = []
+                shared_subs: list[tuple[int, int, int]] = []
                 for bi, t in enumerate(cmd.targets):
                     for wi, wl in enumerate(t.wordlines):
-                        name = self.layout.page_at(t.block, wl)
+                        name = lay.page_at(t.block, wl)
                         if name in scratch_ord:
                             subs.append((bi, wi, scratch_ord[name]))
                             continue  # placeholder gathers the identity row
+                        if shared and name in shared:
+                            shared_subs.append((bi, wi, shared[name]))
+                            continue
                         idx[bi, wi] = self.store.slot(name)
                 steps.append(
                     _Step(
@@ -390,6 +436,7 @@ class FlashDevice(FlashArray):
                         move=cmd.iscm.move_s_to_c,
                         shape=(len(cmd.targets), n_max),
                         subs=tuple(subs),
+                        shared=tuple(shared_subs),
                     )
                 )
                 idxs.append(idx)

@@ -53,6 +53,7 @@ from repro.query.ast import Count, Mask, Query, normalize_agg
 from repro.query.bitmap import BitmapStore
 from repro.query.compile import QueryCompiler, compile_flush
 from repro.query.device import FlashDevice, age_spill_blocks
+from repro.query.optimize import cse_flush
 from repro.query.telemetry import (
     TID_FLUSH,
     TID_TICKETS,
@@ -294,6 +295,16 @@ class BatchScheduler:
     # queue small append() batches and program them as one coalesced delta
     # per touched page on the next flush (or apply_appends())
     coalesce_appends: bool = False
+    # -- the cost-based multi-query optimizer (repro.query.optimize) --------
+    # canonicalize predicates, pick chain orderings by the flashsim cost
+    # model, dedup + CSE-share plans within each fused flush, and
+    # materialize hot predicates; False serves exactly as before (the
+    # optimizer-off baseline the Zipfian benchmark compares against)
+    optimize: bool = True
+    # compiles of one canonical predicate before its result bitmap is
+    # ESP-programmed as a cached page (see QueryCompiler.materialize);
+    # None disables materialization while keeping the other stages
+    materialize_after: int | None = 32
     # -- background-compaction policy (see compact()) -----------------------
     # auto-compact when the stripe's tombstone density crosses this (None
     # disables the policy; compact() stays available explicitly).  Checked
@@ -324,6 +335,9 @@ class BatchScheduler:
     # jitted runners per flush signature — see compile_flush
     _flush_programs: dict = field(default_factory=dict, repr=False)
     _runner_cache: dict = field(default_factory=dict, repr=False)
+    # flush-level CSE rewrites per (batch composition, store epochs) —
+    # see repro.query.optimize.cse_flush
+    _cse_cache: dict = field(default_factory=dict, repr=False)
     # queued (validated) append batches awaiting coalesced programming
     _append_buf: list = field(default_factory=list, repr=False)
 
@@ -333,11 +347,18 @@ class BatchScheduler:
         if self.compiler is None:
             self.compiler = QueryCompiler(self.store, self.device)
         self.compiler.telemetry = self.telemetry
+        self.compiler.optimize = self.optimize
+        self.compiler.materialize_after = (
+            self.materialize_after if self.optimize else None
+        )
         self.device.telemetry = self.telemetry
         self.telemetry.name_tid(TID_FLUSH, "flush")
         self.telemetry.name_tid(TID_TICKETS, "tickets")
         self.telemetry.providers.setdefault("plan_cache", self._plan_cache)
         self.telemetry.providers.setdefault("projection", self.projection)
+        self.telemetry.providers.setdefault(
+            "optimizer", self._optimizer_stats
+        )
 
     def _plan_cache(self) -> dict:
         return {
@@ -345,6 +366,43 @@ class BatchScheduler:
             "misses": self.compiler.misses,
             "size": self.compiler.cache_size,
         }
+
+    def _optimizer_stats(self) -> dict:
+        tele = self.telemetry
+        served = int(self.queries_served)
+        mws = sum(self.command_shape_counts.values())
+        return {
+            "enabled": self.optimize,
+            "sensings_per_query": (mws / served) if served else None,
+            "cse_plan_hits": int(tele.value("cse_plan_hits")),
+            "cse_shared_senses": int(tele.value("cse_shared_senses")),
+            "cse_rewritten_members": int(
+                tele.value("cse_rewritten_members")
+            ),
+            "materializations": int(tele.value("materializations")),
+            "materialization_hits": int(
+                tele.value("materialization_hits")
+            ),
+            "materialization_invalidations": int(
+                tele.value("materialization_invalidations")
+            ),
+        }
+
+    def _materialize_hot(self) -> None:
+        """Materialization policy: at each flush boundary, ESP-program the
+        result bitmaps of predicates past the compiler's heat threshold.
+        The build's one sensing pass + page program are charged to traffic
+        (the payoff is every later compile lowering to ``mat AND valid``)."""
+        if not self.optimize:
+            return
+        for key, canon in self.compiler.hot_preds():
+            plan = self.compiler.materialize(key, canon)
+            if plan is not None:
+                self.telemetry.count(
+                    "wordlines_sensed",
+                    record_plan_traffic(self.command_shape_counts, plan),
+                )
+                self.telemetry.count("materialization_programs")
 
     # -- incremental ingest --------------------------------------------------
     def append(self, rows: dict[str, object]) -> int:
@@ -544,6 +602,7 @@ class BatchScheduler:
         self.device.reset_after_rebuild()
         self._flush_programs.clear()
         self._extras_cache.clear()
+        self._cse_cache.clear()
         self._mask_cache = None
         words = sum(int(w.shape[0]) for w in store.logical.values())
         tele.count("compactions")
@@ -598,6 +657,7 @@ class BatchScheduler:
         self.apply_appends()
         if not self._pending:
             return {}
+        self._materialize_hot()
         tele = self.telemetry
         batch, self._pending = (
             self._pending[: self.max_batch],
@@ -617,6 +677,7 @@ class BatchScheduler:
         queries = [q for _, q, _ in batch]
         aggs = [get_aggregator(q.agg) for q in queries]
 
+        cse = None
         if self.fuse_flush and not self.device._non_esp:
             # the fused path: ONE jitted program senses every signature
             # group and reduces every aggregate kind device-side; ONE
@@ -625,6 +686,18 @@ class BatchScheduler:
             # Plan keys cover only the predicate side, so the members'
             # aggregate specs join the key explicitly — the same predicates
             # under different aggregates are different programs.
+            if self.optimize:
+                ckey = (
+                    tuple(cq.key for cq in compiled),
+                    self.store.epoch,
+                    self.device.store.epoch,
+                )
+                cse = self._cse_cache.get(ckey)
+                if cse is None:
+                    if len(self._cse_cache) >= 64:
+                        self._cse_cache.clear()
+                    cse = cse_flush(compiled, self.compiler, self.device)
+                    self._cse_cache[ckey] = cse
             key = (
                 tuple(cq.key for cq in compiled),
                 tuple(a.spec for a in aggs),
@@ -636,7 +709,7 @@ class BatchScheduler:
                 if len(self._flush_programs) >= 64:
                     self._flush_programs.clear()
                 program = compile_flush(
-                    execs,
+                    execs if cse is None else list(cse.member_execs),
                     [q.agg for q in queries],
                     [self.store] * len(queries),
                     [self.store.epoch] * len(queries),
@@ -645,10 +718,25 @@ class BatchScheduler:
                     runner_cache=self._runner_cache,
                     extras_cache=self._extras_cache,
                     pad=self.device.pad_signatures,
+                    dedup_keys=(
+                        None if cse is None else list(cse.dedup_keys)
+                    ),
+                    shared_execs=() if cse is None else cse.shared_execs,
                 )
                 self._flush_programs[key] = program
             payload = program.run(self.device.store.snapshot(), mask_words)
-            age_spill_blocks(self.device.pec, execs)
+            if cse is None:
+                age_spill_blocks(self.device.pec, execs)
+            else:
+                # wear: one run of each UNIQUE member plan + each shared
+                # plan, plus one scratch program per shared result
+                age_spill_blocks(
+                    self.device.pec,
+                    [cse.member_execs[i] for i in cse.uix]
+                    + list(cse.shared_execs),
+                )
+                for b in cse.shared_blocks:
+                    self.device.pec[b] = self.device.pec.get(b, 0) + 1
             tele.count("fused_dispatches")
             self.device.last_signature_groups = program.n_sense_groups
             t_disp = time.perf_counter()
@@ -694,14 +782,26 @@ class BatchScheduler:
             tele.span("dispatch", "flush", t_comp, t_disp)
             tele.span("reduce+transfer", "flush", t_disp, t_xfer)
         t1 = time.perf_counter()
+        if cse is not None:
+            # physical traffic after CSE: each UNIQUE member plan runs once
+            # (duplicates ride the member gather) plus each shared subplan
+            wls = 0
+            for p in list(cse.member_plans) + list(cse.shared_plans):
+                wls += record_plan_traffic(self.command_shape_counts, p)
+            tele.count("wordlines_sensed", wls)
+            tele.count("cse_plan_hits", cse.n_dedup_hits)
+            tele.count("cse_shared_senses", len(cse.shared_plans))
+            tele.count("cse_rewritten_members", cse.n_rewritten)
+            tele.count("cse_spill_programs", len(cse.shared_plans))
         results: dict[int, QueryResult] = {}
         for i, ((ticket, q, t_submit), cq) in enumerate(zip(batch, compiled)):
             agg = aggs[i]
             self._host_postprocess |= agg.host_postprocess
-            self.telemetry.count(
-                "wordlines_sensed",
-                record_plan_traffic(self.command_shape_counts, cq.plan),
-            )
+            if cse is None:
+                self.telemetry.count(
+                    "wordlines_sensed",
+                    record_plan_traffic(self.command_shape_counts, cq.plan),
+                )
             # each extra plane the aggregate sensed (a BSI slice or an
             # equality bitmap) is one single-wordline read in the
             # projected traffic
@@ -774,6 +874,13 @@ class BatchScheduler:
             ),
             "mean_latency_s": self.total_latency_s / served,
             "mws_commands": sum(self.command_shape_counts.values()),
+            "sensings_per_query": (
+                sum(self.command_shape_counts.values()) / served
+            ),
+            "cse_plan_hits": self.cse_plan_hits,
+            "cse_shared_senses": self.cse_shared_senses,
+            "materializations": self.materializations,
+            "materialization_hits": self.materialization_hits,
             "fused_dispatches": self.fused_dispatches,
             "host_transfers": self.host_transfers,
             "rows_appended": self.rows_appended,
@@ -806,7 +913,13 @@ class BatchScheduler:
             num_rows=self.store.num_rows,
             num_queries=int(self.queries_served),
             host_postprocess=self._host_postprocess,
-            esp_programs=int(self.esp_delta_programs),
+            # appends' delta programs + CSE scratch-page programs + hot-
+            # predicate materialization programs all ride the ESP path
+            esp_programs=int(
+                self.esp_delta_programs
+                + self.cse_spill_programs
+                + self.materialization_programs
+            ),
             block_erases=int(self.block_erases),
             ssd=ssd,
             name=f"flashql({int(self.queries_served)}q)",
@@ -835,5 +948,13 @@ registry_counters(
         "words_programmed",
         "words_written",
         "compaction_rows_dropped",
+        "cse_plan_hits",
+        "cse_shared_senses",
+        "cse_rewritten_members",
+        "cse_spill_programs",
+        "materializations",
+        "materialization_hits",
+        "materialization_invalidations",
+        "materialization_programs",
     ),
 )

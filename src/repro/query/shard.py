@@ -77,6 +77,7 @@ from repro.core.placement import Layout
 from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
 from repro.query.aggregate import (
     get_aggregator,
+    merge_mask_batch,
     reduce_flush,
     validate_query,
 )
@@ -90,6 +91,7 @@ from repro.query.device import (
     make_plan_runner,
     reorder_rows,
 )
+from repro.query.optimize import cse_flush
 from repro.query.scheduler import (
     AGG_READ_SHAPE,
     QueryResult,
@@ -520,6 +522,17 @@ class ShardedFlashQL:
     # per-reduce-signature transfers) — the differential oracle.
     pipeline: bool = False
     coalesce_appends: bool = False
+    # -- the cost-based multi-query optimizer (repro.query.optimize) --------
+    # per-shard canonicalized plan caching + cost-based chain orderings,
+    # whole-plan dedup across the lockstep batch, full subtree CSE inside
+    # each shard's fused pipelined flush, and fleet-wide hot-predicate
+    # materialization; False serves exactly as before (the optimizer-off
+    # baseline the Zipfian benchmark compares against)
+    optimize: bool = True
+    # compiles of one canonical predicate before its result bitmap is
+    # ESP-programmed on EVERY shard (fleet-wide, so device snapshot
+    # shapes stay stackable); None disables materialization only
+    materialize_after: int | None = 32
     # background-compaction policy: once the fleet's tombstone density
     # crosses this threshold (checked at mutation boundaries, never mid-
     # flush), compact() rebuilds the tombstoned stripes; None disables
@@ -555,6 +568,9 @@ class ShardedFlashQL:
     _flush_programs: dict = field(default_factory=dict, repr=False)
     _runner_cache: dict = field(default_factory=dict, repr=False)
     _mask_rows: dict = field(default_factory=dict, repr=False)
+    # per-shard flush-level CSE rewrites, keyed on (shard, batch
+    # composition, epochs) — see repro.query.optimize.cse_flush
+    _cse_cache: dict = field(default_factory=dict, repr=False)
     # queued (validated) append batches awaiting coalesced programming
     _append_buf: list = field(default_factory=list, repr=False)
 
@@ -581,6 +597,10 @@ class ShardedFlashQL:
             ]
         for comp, dev in zip(self.compilers, self.devices):
             comp.telemetry = self.telemetry
+            comp.optimize = self.optimize
+            comp.materialize_after = (
+                self.materialize_after if self.optimize else None
+            )
             dev.telemetry = self.telemetry
         for s in range(self.store.num_shards):
             self.telemetry.name_tid(s, f"shard {s}")
@@ -589,6 +609,9 @@ class ShardedFlashQL:
         self.telemetry.name_tid(TID_TICKETS, "tickets")
         self.telemetry.providers.setdefault("plan_cache", self._plan_cache)
         self.telemetry.providers.setdefault("projection", self.projection)
+        self.telemetry.providers.setdefault(
+            "optimizer", self._optimizer_stats
+        )
         self._queues = [[] for _ in range(self.store.num_shards)]
         self.shard_traffic = [
             Counter() for _ in range(self.store.num_shards)
@@ -600,6 +623,53 @@ class ShardedFlashQL:
             "misses": sum(c.misses for c in self.compilers),
             "size": sum(c.cache_size for c in self.compilers),
         }
+
+    def _optimizer_stats(self) -> dict:
+        tele = self.telemetry
+        served = int(self.queries_served)
+        mws = sum(sum(c.values()) for c in self.shard_traffic)
+        return {
+            "enabled": self.optimize,
+            "sensings_per_query": (mws / served) if served else None,
+            "cse_plan_hits": int(tele.value("cse_plan_hits")),
+            "cse_shared_senses": int(tele.value("cse_shared_senses")),
+            "cse_rewritten_members": int(
+                tele.value("cse_rewritten_members")
+            ),
+            "materializations": int(tele.value("materializations")),
+            "materialization_hits": int(
+                tele.value("materialization_hits")
+            ),
+            "materialization_invalidations": int(
+                tele.value("materialization_invalidations")
+            ),
+        }
+
+    def _maybe_materialize(self) -> None:
+        """Fleet-wide materialization: a predicate hot on ANY shard's
+        compiler materializes on EVERY shard — device snapshot shapes must
+        stay aligned for the cross-shard fused groups, and a fanned-out
+        query heats all its unpruned shards anyway.  Each shard's build
+        (one sensing pass + one ESP page program) is charged to its own
+        traffic mirrors."""
+        if not self.optimize:
+            return
+        hot: dict = {}
+        for comp in self.compilers:
+            for key, canon in comp.hot_preds():
+                hot.setdefault(key, canon)
+        for key, canon in hot.items():
+            for s, comp in enumerate(self.compilers):
+                plan = comp.materialize(key, canon)
+                if plan is not None:
+                    self.telemetry.count(
+                        f"shard{s}.wordlines_sensed",
+                        record_plan_traffic(self.shard_traffic[s], plan),
+                    )
+                    self.telemetry.count("materialization_programs")
+                    self.telemetry.count(
+                        f"shard{s}.materialization_programs"
+                    )
 
     # per-shard counter mirrors ("shard{s}.wordlines_sensed", …) live in
     # the registry next to the fleet totals; the legacy list attributes
@@ -904,6 +974,7 @@ class ShardedFlashQL:
         self._group_cache.clear()
         self._extras_cache.clear()
         self._flush_programs.clear()
+        self._cse_cache.clear()
 
         tele.count("compactions")
         tele.count("block_erases", erased)
@@ -1037,15 +1108,21 @@ class ShardedFlashQL:
         groups with per-reduce-signature transfers (the PR-4 path).
         """
         self.apply_appends()
+        self._maybe_materialize()
         if self.pipeline:
             return self._flush_pipelined()
         return self._flush_lockstep()
 
-    def _pop_batch(self, s: int, depth: int):
+    def _pop_batch(self, s: int, depth: int, record: bool = True):
         """Pop up to ``depth`` queries from shard ``s``'s queue, compiled
         through its plan/exec caches; records plan traffic (fleet total +
         the ``shard{s}.*`` registry mirror) and, when telemetry is
-        enabled, accumulates per-ticket sensing attribution."""
+        enabled, accumulates per-ticket sensing attribution.
+
+        ``record=False`` defers the traffic recording to the caller: the
+        optimizer paths dedup/CSE the batch first and charge only the
+        plans that physically run (per-ticket attribution still reflects
+        each query's standalone plan — what the ticket *asked for*)."""
         tele = self.telemetry
         batch, self._queues[s] = (
             self._queues[s][:depth],
@@ -1058,10 +1135,11 @@ class ShardedFlashQL:
             self._cache_hits[ticket] &= cq.cache_hit
             e = self.compilers[s].exec_for(cq)
             out.append((ticket, q, cq, e))
-            tele.count(
-                f"shard{s}.wordlines_sensed",
-                record_plan_traffic(self.shard_traffic[s], cq.plan),
-            )
+            if record:
+                tele.count(
+                    f"shard{s}.wordlines_sensed",
+                    record_plan_traffic(self.shard_traffic[s], cq.plan),
+                )
             if tele.enabled:
                 attr = self._attr.get(ticket)
                 if attr is None:
@@ -1109,16 +1187,35 @@ class ShardedFlashQL:
             for t in list(self._partials)
             if len(self._partials[t]) == expected
         ]
+        popped = []
         for ticket in done:
             q, t_submit = self._meta.pop(ticket)
             parts = self._partials.pop(ticket)
             agg = get_aggregator(q.agg)
             self._host_postprocess |= agg.host_postprocess
+            popped.append((ticket, q, t_submit, parts, agg))
+        # MASK tickets un-stripe together: one unpack/scatter pass per
+        # shard and one packbits for the whole flush, instead of a numpy
+        # pass per (ticket x shard) — see merge_mask_batch
+        merged: dict[int, object] = {}
+        mask_ix = [
+            n for n, it in enumerate(popped) if it[4].kind == "mask"
+        ]
+        if len(mask_ix) > 1:
+            vecs = merge_mask_batch(
+                [popped[n][3] for n in mask_ix], self.store
+            )
+            merged = dict(zip(mask_ix, vecs))
+            tele.count("mask_batch_merges")
+        for n, (ticket, q, t_submit, parts, agg) in enumerate(popped):
+            value = (
+                merged[n] if n in merged else agg.merge(parts, self.store)
+            )
             attr = self._attr.pop(ticket, None)
             results[ticket] = QueryResult(
                 ticket,
                 q,
-                agg.merge(parts, self.store),
+                value,
                 t1 - t_submit,
                 cache_hit=self._cache_hits.pop(ticket),
                 attribution=attr,
@@ -1191,11 +1288,12 @@ class ShardedFlashQL:
         path instead (their reads may inject errors) and return None.
         """
         tele = self.telemetry
+        dev = self.devices[s]
+        cse_on = self.optimize and not dev._non_esp
         t_d0 = time.perf_counter()
-        compiled = self._pop_batch(s, depth)
+        compiled = self._pop_batch(s, depth, record=not cse_on)
         if not compiled:
             return None
-        dev = self.devices[s]
         st = self.store.shards[s]
         aggs = [get_aggregator(q.agg) for _, q, _, _ in compiled]
         execs = [e for _, _, _, e in compiled]
@@ -1232,6 +1330,26 @@ class ShardedFlashQL:
                 self._attr_phase(compiled, "compile_s", t_d1 - t_d0)
                 self._attr_phase(compiled, "device_s", t_d2 - t_d1)
             return None
+        # per-shard CSE: whole-plan dedup + shared-subtree extraction
+        # within this shard's fused flush (repro.query.optimize.cse_flush)
+        cse = None
+        if cse_on:
+            ckey = (
+                s,
+                tuple(cq.key for _, _, cq, _ in compiled),
+                st.epoch,
+                dev.store.epoch,
+            )
+            cse = self._cse_cache.get(ckey)
+            if cse is None:
+                if len(self._cse_cache) >= 64:
+                    self._cse_cache.clear()
+                cse = cse_flush(
+                    [cq for _, _, cq, _ in compiled],
+                    self.compilers[s],
+                    dev,
+                )
+                self._cse_cache[ckey] = cse
         # plan keys cover only the predicate side; the aggregate specs
         # join the key so same-predicate flushes under different
         # aggregates never share a program
@@ -1247,7 +1365,7 @@ class ShardedFlashQL:
             if len(self._flush_programs) >= 64:
                 self._flush_programs.clear()
             program = compile_flush(
-                execs,
+                execs if cse is None else list(cse.member_execs),
                 [q.agg for _, q, _, _ in compiled],
                 [st] * len(compiled),
                 [(s, st.epoch)] * len(compiled),
@@ -1256,11 +1374,36 @@ class ShardedFlashQL:
                 runner_cache=self._runner_cache,
                 extras_cache=self._extras_cache,
                 pad=dev.pad_signatures,
+                dedup_keys=(
+                    None if cse is None else list(cse.dedup_keys)
+                ),
+                shared_execs=() if cse is None else cse.shared_execs,
             )
             self._flush_programs[key] = program
         t_d2 = time.perf_counter()
         payload = program.run(dev.store.snapshot(), self._mask_row(s))
-        age_spill_blocks(dev.pec, execs)
+        if cse is None:
+            age_spill_blocks(dev.pec, execs)
+        else:
+            # physical traffic + wear after CSE: each UNIQUE member plan
+            # runs once (duplicates ride the member gather), each shared
+            # subplan senses once and programs one scratch page
+            age_spill_blocks(
+                dev.pec,
+                [cse.member_execs[i] for i in cse.uix]
+                + list(cse.shared_execs),
+            )
+            for b in cse.shared_blocks:
+                dev.pec[b] = dev.pec.get(b, 0) + 1
+            wls = 0
+            for p in list(cse.member_plans) + list(cse.shared_plans):
+                wls += record_plan_traffic(self.shard_traffic[s], p)
+            tele.count(f"shard{s}.wordlines_sensed", wls)
+            tele.count("cse_plan_hits", cse.n_dedup_hits)
+            tele.count("cse_shared_senses", len(cse.shared_plans))
+            tele.count("cse_rewritten_members", cse.n_rewritten)
+            tele.count("cse_spill_programs", len(cse.shared_plans))
+            tele.count(f"shard{s}.cse_esp_programs", len(cse.shared_plans))
         tele.count("fused_dispatches")
         tele.count(f"shard{s}.fused_dispatches")
         tele.count("signature_groups", program.n_sense_groups)
@@ -1361,12 +1504,38 @@ class ShardedFlashQL:
         keys: list[tuple] = []  # (shard, plan-cache key) per item
         popped: list = []  # the _pop_batch tuples, for phase attribution
         for s in active:
-            for entry in self._pop_batch(s, self.queue_depth):
+            for entry in self._pop_batch(
+                s, self.queue_depth, record=not self.optimize
+            ):
                 ticket, q, cq, e = entry
                 items.append((s, ticket, e))
                 plans.append(cq.plan)
                 keys.append((s, cq.key))
                 popped.append(entry)
+
+        # whole-plan dedup across the lockstep batch: members sharing one
+        # (shard, canonical plan) sense once and read the same output row.
+        # (Subtree CSE stays a pipelined/single-device feature — the
+        # cross-shard runners would have to thread shared latch values
+        # through every vmap group.)
+        uix = list(range(len(items)))
+        inv: list[int] = uix
+        if self.optimize and items:
+            pos: dict = {}
+            uix, inv = [], []
+            for i, k in enumerate(keys):
+                j = pos.get(k)
+                if j is None:
+                    j = pos[k] = len(uix)
+                    uix.append(i)
+                inv.append(j)
+            tele.count("cse_plan_hits", len(items) - len(uix))
+            for i in uix:
+                s = items[i][0]
+                tele.count(
+                    f"shard{s}.wordlines_sensed",
+                    record_plan_traffic(self.shard_traffic[s], plans[i]),
+                )
         t_sc = time.perf_counter()
 
         if items:
@@ -1374,17 +1543,22 @@ class ShardedFlashQL:
             # Group outputs are concatenated and re-ordered with ONE gather —
             # per-item jax slicing would cost O(shards x batch) dispatches
             # and dominate serving time at realistic batch sizes.
-            execs = [e for _, _, e in items]
+            # Only the UNIQUE items execute; duplicates gather their
+            # representative's row below.
+            uitems = [items[i] for i in uix]
+            uplans = [plans[i] for i in uix]
+            ukeys = [keys[i] for i in uix]
+            execs = [e for _, _, e in uitems]
             tele.count(
                 "distinct_signatures",
                 len({e.signature for e in execs if e is not None}),
             )
             fleet_w = self.store.shards[active[0]].words
             pieces: list[jax.Array] = []  # (B_g, fleet_w) per group
-            order: list[int] = []  # item index per output row
+            order: list[int] = []  # unique-item index per output row
             data = self._snapshots_stack(active)
             if data is not None:
-                cache_key = (tuple(active),) + tuple(keys)
+                cache_key = (tuple(active),) + tuple(ukeys)
                 prepared = self._group_cache.get(cache_key)
                 if prepared is None:
                     prepared = []
@@ -1392,7 +1566,7 @@ class ShardedFlashQL:
                         execs, pad=True
                     ):
                         sids = np.array(
-                            [items[i][0] for i in members], np.int32
+                            [uitems[i][0] for i in members], np.int32
                         )
                         fleet_ix = jnp.asarray(
                             np.searchsorted(
@@ -1417,18 +1591,18 @@ class ShardedFlashQL:
                     )
                     pieces.append(out[:, :fleet_w])
                     order.extend(members)
-                for s, _, e in items:
+                for s, _, e in uitems:
                     age_spill_blocks(self.devices[s].pec, (e,))
                 tele.count("fused_flushes")
             else:
                 # per-device fallback: each shard runs its own vmap batches
                 for s in active:
-                    ix = [i for i, it in enumerate(items) if it[0] == s]
+                    ix = [i for i, it in enumerate(uitems) if it[0] == s]
                     pieces.append(
                         self.devices[s].execute_batch_stacked(
-                            [plans[i] for i in ix],
+                            [uplans[i] for i in ix],
                             execs=[execs[i] for i in ix],
-                            batch_key=tuple(keys[i] for i in ix),
+                            batch_key=tuple(ukeys[i] for i in ix),
                         )
                     )
                     order.extend(ix)
@@ -1439,7 +1613,10 @@ class ShardedFlashQL:
                     tele.count(
                         "eager_plans", self.devices[s].last_eager_plans
                     )
-            allout = reorder_rows(pieces, order)
+            allout = reorder_rows(pieces, order)  # (U, fleet_w), uix order
+            if len(uix) != len(items):
+                # fan each duplicate out to its representative's row
+                allout = allout[jnp.asarray(np.asarray(inv, np.int32))]
 
             # reduce: mask shard partials (identity pad rows, word slack,
             # and fleet-width padding of short stripes), then one jit'd
@@ -1555,6 +1732,13 @@ class ShardedFlashQL:
             "mws_commands": sum(
                 sum(c.values()) for c in self.shard_traffic
             ),
+            "sensings_per_query": (
+                sum(sum(c.values()) for c in self.shard_traffic) / served
+            ),
+            "cse_plan_hits": self.cse_plan_hits,
+            "cse_shared_senses": self.cse_shared_senses,
+            "materializations": self.materializations,
+            "materialization_hits": self.materialization_hits,
             "rows_appended": self.rows_appended,
             "esp_delta_programs": self.esp_delta_programs,
             "append_batches_coalesced": self.append_batches_coalesced,
@@ -1586,7 +1770,15 @@ class ShardedFlashQL:
                 num_rows=self.store.shards[s].num_rows,
                 num_queries=self.queries_served,
                 host_postprocess=self._host_postprocess,
-                esp_programs=self.shard_esp_programs[s],
+                # append deltas + CSE scratch-page programs + hot-predicate
+                # materialization programs all ride this shard's ESP path
+                esp_programs=self.shard_esp_programs[s]
+                + int(self.telemetry.value(f"shard{s}.cse_esp_programs"))
+                + int(
+                    self.telemetry.value(
+                        f"shard{s}.materialization_programs"
+                    )
+                ),
                 block_erases=int(
                     self.telemetry.value(f"shard{s}.block_erases")
                 ),
@@ -1647,6 +1839,14 @@ registry_counters(
         "words_programmed",  # physical ESP traffic (appends+deletes+GC)
         "words_written",  # logical client mutations — WA denominator
         "compaction_rows_dropped",
+        "cse_plan_hits",  # flush members served by another member's plan
+        "cse_shared_senses",  # shared subtree plans sensed (pipelined CSE)
+        "cse_rewritten_members",  # member plans spliced onto shared pages
+        "cse_spill_programs",  # scratch-page ESP programs for shared results
+        "materializations",  # hot-predicate bitmap pages built
+        "materialization_hits",  # compiles lowered onto a cached mat page
+        "materialization_invalidations",  # mat pages dropped (stale epochs)
+        "materialization_programs",  # per-shard mat page ESP programs
     ),
 )
 
@@ -1666,6 +1866,8 @@ def build_sharded_flashql(
     coalesce_appends: bool = False,
     compact_density: float | None = None,
     grow_on_overflow: bool = False,
+    optimize: bool = True,
+    materialize_after: int | None = 32,
 ) -> ShardedFlashQL:
     """Ingest ``table``, program ``num_shards`` fresh devices, return the
     serving frontend — the one-call path used by tests and benchmarks.
@@ -1692,4 +1894,6 @@ def build_sharded_flashql(
         coalesce_appends=coalesce_appends,
         compact_density=compact_density,
         grow_on_overflow=grow_on_overflow,
+        optimize=optimize,
+        materialize_after=materialize_after,
     )

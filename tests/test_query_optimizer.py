@@ -1,0 +1,440 @@
+"""Optimizer correctness: canonicalization, cost-based reordering, CSE,
+and hot-predicate materialization.
+
+Every optimizer stage must be *semantically invisible* — the optimized
+system returns bit-identical results to the unoptimized one, it just
+senses less.  The tests here check each stage against the ``eval_expr``
+and plain-numpy oracles in isolation, then end-to-end with the optimizer
+on vs off on twin systems over one table, plus the satellite
+regressions: operand-order variants of one predicate must share a single
+plan-cache entry, and materialized pages must invalidate on appends but
+never on deletes.
+
+Property-style execution goes through ``tests/_hypothesis_compat``: with
+`hypothesis` installed, predicates are drawn adversarially; without it,
+the seeded corpus loops keep the same coverage running.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.commands import MWSCommand, SpillCommand
+from repro.core.engine import eval_expr
+from repro.core.planner import Planner
+from repro.flashsim.geometry import DEFAULT_SSD
+from repro.flashsim.timing import mws_latency_us
+from repro.query import (
+    Agg,
+    BatchScheduler,
+    BitmapStore,
+    Eq,
+    FlashDevice,
+    In,
+    Not,
+    Query,
+    Range,
+    build_sharded_flashql,
+    lower,
+)
+from repro.query.ast import and_ as qand, canonicalize, or_ as qor, pred_key
+from repro.query.optimize import best_plan, plan_cost_us, reorder_expr
+from repro.query.oracle import np_select
+
+from tests._hypothesis_compat import given, settings, st
+
+
+def _table(rng, n):
+    return {
+        "country": rng.integers(0, 6, n),
+        "device": rng.integers(0, 4, n),
+        "age": rng.integers(0, 90, n),
+    }
+
+
+def _random_pred(rng, depth=0):
+    kind = rng.integers(0, 6 if depth < 2 else 4)
+    if kind == 0:
+        return Eq("country", int(rng.integers(0, 7)))
+    if kind == 1:
+        return In(
+            "device", [int(v) for v in rng.choice(5, rng.integers(1, 4))]
+        )
+    if kind == 2:
+        lo = int(rng.integers(0, 70))
+        return Range("age", lo, lo + int(rng.integers(0, 40)))
+    if kind == 3:
+        return Not(_random_pred(rng, depth + 1))
+    children = [
+        _random_pred(rng, depth + 1) for _ in range(rng.integers(2, 4))
+    ]
+    return qand(*children) if kind == 4 else qor(*children)
+
+
+def _build(table, **kw):
+    store = BitmapStore()
+    store.ingest(table, reserve_rows=kw.pop("reserve_rows", 0))
+    dev = FlashDevice(num_planes=2)
+    store.program(dev)
+    return BatchScheduler(dev, store, **kw)
+
+
+def _bits(result, n):
+    return np.asarray(result.mask.to_bits()).astype(bool)[:n]
+
+
+# ---------------------------------------------------------------------------
+# canonicalization: structural identity without semantic drift
+# ---------------------------------------------------------------------------
+
+
+def _check_canonicalize(seed):
+    rng = np.random.default_rng(seed)
+    table = _table(rng, 64)
+    for _ in range(8):
+        p = _random_pred(rng)
+        c = canonicalize(p)
+        # bit-exact vs the numpy oracle on the raw table
+        np.testing.assert_array_equal(
+            np_select(c, table, 64), np_select(p, table, 64), err_msg=f"{p}"
+        )
+        # idempotent: a canonical predicate is its own canonical form
+        assert pred_key(canonicalize(c)) == pred_key(c), p
+
+
+def test_canonicalize_bit_exact_corpus():
+    for seed in (1, 2, 3, 4):
+        _check_canonicalize(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_canonicalize_bit_exact_property(seed):
+    _check_canonicalize(seed)
+
+
+def test_canonicalize_structural_identities():
+    a, b = Eq("country", 1), Eq("device", 2)
+    # commuted chains hash equal
+    assert pred_key(canonicalize(qand(a, b))) == pred_key(
+        canonicalize(qand(b, a))
+    )
+    assert pred_key(canonicalize(qor(a, b))) == pred_key(
+        canonicalize(qor(b, a))
+    )
+    # double negation collapses
+    assert pred_key(canonicalize(Not(Not(a)))) == pred_key(a)
+    # Or-of-Eq over one column merges with In, order/duplicates ignored
+    assert pred_key(
+        canonicalize(qor(Eq("device", 2), Eq("device", 1), Eq("device", 2)))
+    ) == pred_key(canonicalize(In("device", [1, 2, 1])))
+
+
+# ---------------------------------------------------------------------------
+# satellite: plan-cache keying on the canonical form
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_merges_operand_orders():
+    """Operand-order variants of one predicate are ONE cache entry: the
+    second serve is a pure hit, with zero additional compiles."""
+    rng = np.random.default_rng(5)
+    table = _table(rng, 80)
+    a, b = Eq("country", 1), Range("age", 20, 50)
+
+    sched = _build(table)
+    r1 = sched.serve([Query(qand(a, b))])
+    assert sched.compiler.misses == 1
+    r2 = sched.serve([Query(qand(b, a))])
+    assert sched.compiler.misses == 1, "commuted operands must share a plan"
+    assert sched.compiler.hits >= 1
+    assert sched.compiler.cache_size == 1
+    assert r1[0].count == r2[0].count
+
+    # Or-of-Eq vs the equivalent In: same canonical form, same entry
+    sched.serve([Query(qor(Eq("device", 3), Eq("device", 0)))])
+    assert sched.compiler.misses == 2
+    sched.serve([Query(In("device", [0, 3]))])
+    assert sched.compiler.misses == 2
+
+    # the unoptimized compiler keys on the raw structure: two entries
+    plain = _build(table, optimize=False)
+    plain.serve([Query(qand(a, b))])
+    plain.serve([Query(qand(b, a))])
+    assert plain.compiler.misses == 2
+
+
+# ---------------------------------------------------------------------------
+# cost model + reordering
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cost_matches_timing_model():
+    rng = np.random.default_rng(7)
+    table = _table(rng, 80)
+    store = BitmapStore()
+    store.ingest(table)
+    dev = FlashDevice(num_planes=2)
+    store.program(dev)
+    expr = lower(qand(Range("age", 5, 60), In("device", [0, 2])), store)
+    plan = Planner(dev.layout).compile(expr)
+    want = 0.0
+    for cmd in plan.commands:
+        if isinstance(cmd, MWSCommand):
+            want += mws_latency_us(
+                DEFAULT_SSD.t_r_us,
+                len(cmd.targets),
+                max(len(t.wordlines) for t in cmd.targets),
+            )
+        elif isinstance(cmd, SpillCommand):
+            want += DEFAULT_SSD.t_esp_us
+    assert want > 0
+    assert plan_cost_us(plan) == pytest.approx(want)
+
+
+def _check_reorder(seed):
+    rng = np.random.default_rng(seed)
+    table = _table(rng, 64)
+    store = BitmapStore()
+    store.ingest(table)
+    dev = FlashDevice(num_planes=2)
+    store.program(dev)
+    for _ in range(6):
+        expr = lower(_random_pred(rng), store)
+        alt = reorder_expr(expr, dev.layout)
+        np.testing.assert_array_equal(
+            np.asarray(eval_expr(alt, store.logical)),
+            np.asarray(eval_expr(expr, store.logical)),
+        )
+        # best_plan never returns a plan pricier than the naive one, and
+        # the winning candidate evaluates identically
+        snap = dev.layout.snapshot()
+        naive = plan_cost_us(Planner(dev.layout).compile(expr))
+        dev.layout.restore(snap)
+        plan, cand, cost = best_plan(expr, dev.layout)
+        assert cost <= naive + 1e-9
+        np.testing.assert_array_equal(
+            np.asarray(eval_expr(cand, store.logical)),
+            np.asarray(eval_expr(expr, store.logical)),
+        )
+
+
+def test_reorder_bit_exact_corpus():
+    for seed in (11, 12, 13):
+        _check_reorder(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_reorder_bit_exact_property(seed):
+    _check_reorder(seed)
+
+
+# ---------------------------------------------------------------------------
+# cross-query CSE: sense once, answer many
+# ---------------------------------------------------------------------------
+
+
+def test_flush_dedups_identical_queries():
+    rng = np.random.default_rng(21)
+    table = _table(rng, 80)
+    sched = _build(table)
+    p = qand(Range("age", 10, 60), Eq("country", 2))
+    got = sched.serve([Query(p), Query(p), Query(p)])
+    want = int(np_select(p, table, 80).sum())
+    assert [r.count for r in got] == [want] * 3
+    assert sched.stats()["cse_plan_hits"] == 2
+
+
+def test_cse_shares_subtree_and_stays_exact():
+    """Six queries AND one expensive Range subtree with different Eq
+    leaves: the optimized flush senses the subtree once (shared plan +
+    scratch splice), answers bit-identically to the unoptimized twin,
+    and needs >= 1.5x fewer sensings per query."""
+    rng = np.random.default_rng(22)
+    table = _table(rng, 96)
+    shared = Range("age", 12, 57)
+    queries = [
+        Query(qand(Eq("country", c), shared)) for c in range(6)
+    ] + [Query(qand(Eq("country", 0), shared), agg=Agg.MASK)]
+
+    on = _build(table, materialize_after=None)
+    off = _build(table, optimize=False)
+    got_on = on.serve(queries)
+    got_off = off.serve(queries)
+    for a, b in zip(got_on[:6], got_off[:6]):
+        assert a.count == b.count
+    np.testing.assert_array_equal(_bits(got_on[6], 96), _bits(got_off[6], 96))
+    np.testing.assert_array_equal(
+        _bits(got_on[6], 96), np_select(queries[6].where, table, 96)
+    )
+
+    s_on, s_off = on.stats(), off.stats()
+    assert s_on["cse_shared_senses"] >= 1
+    assert s_off["cse_shared_senses"] == 0
+    assert s_off["sensings_per_query"] >= 1.5 * s_on["sensings_per_query"]
+    # the shared scratch program is charged as device wear + ESP traffic
+    assert on.telemetry.snapshot()["projection"]["esp_programs"] >= 1
+
+
+def _check_on_off_equivalence(seed):
+    rng = np.random.default_rng(seed)
+    table = _table(rng, 48)
+    preds = [_random_pred(rng) for _ in range(3)]
+    # duplicates + commuted composites make sharing opportunities likely
+    preds += [qand(preds[0], preds[1]), qand(preds[1], preds[0]), preds[0]]
+    queries = [Query(p) for p in preds] + [
+        Query(p, agg=Agg.MASK) for p in preds[:2]
+    ]
+    on = _build(table)
+    off = _build(table, optimize=False)
+    got_on = on.serve(queries)
+    got_off = off.serve(queries)
+    for q, a, b in zip(queries, got_on, got_off):
+        if q.agg is Agg.MASK:
+            np.testing.assert_array_equal(
+                _bits(a, 48), _bits(b, 48), err_msg=f"{seed} {q}"
+            )
+        else:
+            assert a.count == b.count, (seed, q)
+
+
+def test_optimizer_on_off_equivalence_corpus():
+    for seed in (31, 32, 33):
+        _check_on_off_equivalence(seed)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_optimizer_on_off_equivalence_property(seed):
+    _check_on_off_equivalence(seed)
+
+
+def test_sharded_optimizer_exact_and_cheaper():
+    """Pipelined fleets, optimizer on vs off, duplicate-heavy workload:
+    identical results, strictly fewer sensings per query with CSE on."""
+    rng = np.random.default_rng(41)
+    table = _table(rng, 90)
+    shared = Range("age", 15, 70)
+    queries = [
+        Query(qand(Eq("country", c % 4), shared)) for c in range(8)
+    ] + [Query(qand(Eq("country", 1), shared), agg=Agg.MASK)]
+    on = build_sharded_flashql(
+        table, 2, policy="roundrobin", num_planes=2, pipeline=True
+    )
+    off = build_sharded_flashql(
+        table, 2, policy="roundrobin", num_planes=2, pipeline=True,
+        optimize=False,
+    )
+    got_on = on.serve(queries)
+    got_off = off.serve(queries)
+    for a, b in zip(got_on[:8], got_off[:8]):
+        assert a.count == b.count
+    np.testing.assert_array_equal(_bits(got_on[8], 90), _bits(got_off[8], 90))
+    assert (
+        off.stats()["sensings_per_query"]
+        > on.stats()["sensings_per_query"]
+    )
+    assert on.stats()["cse_plan_hits"] >= 4  # 8 queries, 4 distinct
+
+
+# ---------------------------------------------------------------------------
+# hot-predicate materialization: cached bitmap pages + epoch guards
+# ---------------------------------------------------------------------------
+
+
+def test_materialization_hits_then_append_invalidates():
+    rng = np.random.default_rng(51)
+    n = 80
+    table = _table(rng, n)
+    sched = _build(table, reserve_rows=40, materialize_after=2)
+    hot = qand(Range("age", 10, 60), In("device", [0, 1]))
+
+    def check(resident, live):
+        (r,) = sched.serve([Query(hot, agg=Agg.MASK)])
+        m = len(live)
+        want = np_select(hot, resident, m) & live
+        np.testing.assert_array_equal(_bits(r, m), want)
+
+    live = np.ones(n, bool)
+    for _ in range(4):  # past the threshold: built once, then pure hits
+        check(table, live)
+    comp = sched.compiler
+    assert comp.mat_builds == 1
+    assert comp.mat_hits >= 1
+    assert comp.mat_invalidations == 0
+
+    # deletes must NOT invalidate: the valid page composes at read time
+    sched.delete(np.asarray([3, 17, 44]))
+    live[[3, 17, 44]] = False
+    check(table, live)
+    assert comp.mat_invalidations == 0
+    assert comp.mat_builds == 1
+
+    # appends MUST: the cached bitmap would zero-miss the new rows
+    batch = _table(rng, 9)
+    sched.append(batch)
+    table = {c: np.concatenate([v, batch[c]]) for c, v in table.items()}
+    live = np.concatenate([live, np.ones(9, bool)])
+    hits_before = comp.mat_hits
+    for _ in range(4):  # invalidate, re-earn the threshold, rebuild, hit
+        check(table, live)
+    assert comp.mat_invalidations == 1
+    assert comp.mat_builds == 2
+    assert comp.mat_hits > hits_before
+    s = sched.stats()
+    assert s["materializations"] == 2
+    assert s["materialization_hits"] == comp.mat_hits
+
+
+def test_materialization_reprograms_stable_page():
+    """Rebuilds after invalidation reuse the predicate's page name, so
+    plan-cache entries gathering its slot stay coherent."""
+    rng = np.random.default_rng(52)
+    table = _table(rng, 60)
+    sched = _build(table, reserve_rows=30, materialize_after=1)
+    hot = qand(Range("age", 0, 45), Eq("country", 1))
+    # heat accrues during a flush; the build fires at the NEXT boundary
+    sched.serve([Query(hot)] * 2)
+    sched.serve([Query(hot)] * 2)
+    comp = sched.compiler
+    assert comp.mat_builds == 1
+    (name0,) = comp._mat_names.values()
+    sched.append(_table(rng, 5))
+    sched.serve([Query(hot)] * 2)  # invalidates + re-earns the threshold
+    sched.serve([Query(hot)] * 2)
+    assert comp.mat_builds == 2
+    (name1,) = comp._mat_names.values()
+    assert name0 == name1
+
+
+# ---------------------------------------------------------------------------
+# telemetry exposure
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_exposes_optimizer_stats():
+    rng = np.random.default_rng(61)
+    table = _table(rng, 64)
+    sched = _build(table, materialize_after=2)
+    p = qand(Range("age", 10, 50), Eq("device", 1))
+    for _ in range(3):
+        sched.serve([Query(p), Query(p)])
+    opt = sched.telemetry.snapshot()["optimizer"]
+    assert opt["enabled"] is True
+    assert opt["sensings_per_query"] > 0
+    assert opt["cse_plan_hits"] >= 1
+    assert opt["materializations"] >= 1
+    for k in (
+        "cse_shared_senses",
+        "cse_rewritten_members",
+        "materialization_hits",
+        "materialization_invalidations",
+    ):
+        assert k in opt
+
+    sq = build_sharded_flashql(table, 2, num_planes=2)
+    sq.serve([Query(p), Query(p)])
+    sopt = sq.telemetry.snapshot()["optimizer"]
+    assert sopt["enabled"] is True
+    assert sopt["sensings_per_query"] > 0
+    assert sopt["cse_plan_hits"] >= 1
