@@ -13,6 +13,12 @@ from dataclasses import dataclass, field
 
 MAX_INTER_BLOCKS = 4  # power-budget limit measured in §5.2 (Fig. 14)
 WLS_PER_BLOCK = 48  # NAND-string length of the characterized chips
+# Threshold sensing (MCFlash-style dynamic sensing) compares the summed
+# bitline current of the activated blocks against a programmable reference
+# instead of a fixed conduct/no-conduct cut, so its power envelope is the
+# slower staircase sense, not the parallel-OR one — the characterized
+# dynamic-sensing chips resolve up to 8 block currents in one shot.
+THRESHOLD_MAX_BLOCKS = 8
 
 
 @dataclass(frozen=True)
@@ -74,6 +80,36 @@ class MWSCommand:
 
 
 @dataclass(frozen=True)
+class ThresholdCommand(MWSCommand):
+    """k-of-N threshold sensing (MCFlash dynamic sensing thresholds).
+
+    Bit ``j`` of the raw result is 1 iff at least ``k`` of the activated
+    blocks conduct at position ``j`` — each block conducts iff ALL of its
+    selected wordlines conduct, exactly as in a plain MWS, but the
+    cross-block combine is a programmable current threshold instead of
+    the fixed wired-OR (``k == 1`` degenerates to the MWS OR).
+    ``iscm.inverse_read`` complements the result AFTER the comparison.
+    """
+
+    k: int = 1
+
+    def __post_init__(self):
+        if not 1 <= len(self.targets) <= THRESHOLD_MAX_BLOCKS:
+            raise ValueError(
+                f"threshold sensing activates 1..{THRESHOLD_MAX_BLOCKS} "
+                f"blocks, got {len(self.targets)} (dynamic-sensing power "
+                "envelope)"
+            )
+        blocks = [t.block for t in self.targets]
+        if len(set(blocks)) != len(blocks):
+            raise ValueError("duplicate block address slots")
+        if not 1 <= self.k <= len(self.targets):
+            raise ValueError(
+                f"threshold k={self.k} outside 1..{len(self.targets)} blocks"
+            )
+
+
+@dataclass(frozen=True)
 class XORCommand:
     """C-latch := S-latch XOR C-latch (existing on-chip XOR logic, §6.1)."""
 
@@ -113,7 +149,12 @@ class SpillCommand:
 
 
 Command = (
-    MWSCommand | XORCommand | ESPCommand | TransferCommand | SpillCommand
+    MWSCommand
+    | ThresholdCommand
+    | XORCommand
+    | ESPCommand
+    | TransferCommand
+    | SpillCommand
 )
 
 

@@ -40,10 +40,11 @@ from repro.core.commands import (
     ESPCommand,
     MWSCommand,
     SpillCommand,
+    ThresholdCommand,
     TransferCommand,
     XORCommand,
 )
-from repro.core.expr import Expr, Node, Page
+from repro.core.expr import Expr, Node, Page, Threshold
 from repro.core.placement import Layout
 from repro.core.planner import Planner
 from repro.core.reliability import (
@@ -54,6 +55,7 @@ from repro.core.reliability import (
 )
 from repro.core.store import IDENTITY_SLOT, PackedStore
 from repro.kernels.mws import mws_reduce
+from repro.kernels.threshold import bitslice_threshold, threshold_reduce
 
 
 def _stable_seed(name: str) -> int:
@@ -99,6 +101,38 @@ def fused_block_reduce(
     return ~raw if inverse else raw
 
 
+def threshold_block_reduce(
+    cube: jax.Array, k: int, inverse: bool, *, interpret: bool = True
+) -> jax.Array:
+    """k-of-N threshold sensing on a gathered ``(blocks, wls, words)`` cube.
+
+    Stage one is identical to a plain MWS: each block's NAND strings AND
+    its selected wordlines (identity-padded rows are AND-neutral).  The
+    cross-block combine then sets bit j iff at least ``k`` blocks conduct
+    at j (dynamic sensing threshold); ``k == 1`` reproduces the wired-OR
+    exactly.  Blocks padded with the all-zeros row never conduct, so
+    family/vmap shape padding can never count toward the threshold.
+    ``inverse`` complements AFTER the comparison.
+
+    Like :func:`fused_block_reduce`, emulation (``interpret=True``) folds
+    with plain XLA ops — the same bit-sliced ripple-carry counter the
+    Pallas kernel runs, so both paths are bit-identical by construction —
+    while ``interpret=False`` dispatches the fused kernels.  Explicit
+    folds throughout (no ``jnp.bitwise_*.reduce``).
+    """
+    kb, n, w = cube.shape
+    if interpret:
+        anded = cube[:, 0]
+        for i in range(1, n):
+            anded = anded & cube[:, i]
+        raw = bitslice_threshold(anded, k, kb)[0]
+    else:
+        flat = cube.swapaxes(0, 1).reshape(n, kb * w)
+        anded = mws_reduce(flat, BitOp.AND, interpret=False).reshape(kb, w)
+        raw = threshold_reduce(anded, k, interpret=False)
+    return ~raw if inverse else raw
+
+
 @dataclass
 class FlashArray:
     """A (single-plane) Flash-Cosmos array: layout + packed page store."""
@@ -131,8 +165,21 @@ class FlashArray:
         block: int | None = None,
         wordline: int | None = None,
         esp: bool = True,
+        charge: bool = True,
     ) -> None:
-        """Program a page. ESP mode (default) guarantees error-free reads."""
+        """Program a page. ESP mode (default) guarantees error-free reads.
+
+        Under multi-level packing (``layout.levels > 1``) the ESP margin
+        stretches to ``tESP = (1 + levels) x tPROG`` — the per-level
+        margin shrinks by 1/levels, so holding the paper's zero-error
+        result needs the proportionally longer program (still zero-error
+        per the reliability model at every supported level count).
+
+        ``charge=False`` records the page content without bumping the
+        wear/ESP counters: the MLC program path groups the co-resident
+        logical pages of one physical page into ONE counted program (the
+        group lead charges; the other levels ride the same ISPP pass).
+        """
         if name in self.layout:
             p = self.layout[name]
             inverted = p.inverted if inverted is None else inverted
@@ -142,10 +189,21 @@ class FlashArray:
                 (p,) = self.layout.place_colocated([name], inverted)
             else:
                 p = self.layout.place(name, block, wordline or 0, inverted)
+        levels = self.layout.levels
         cfg = (
-            ProgramConfig(CellMode.SLC, randomized=False, tesp_ratio=2.0)
+            ProgramConfig(
+                CellMode.SLC,
+                randomized=False,
+                tesp_ratio=1.0 + float(levels),
+                levels=levels,
+            )
             if esp
-            else ProgramConfig(CellMode.SLC, randomized=False, tesp_ratio=1.0)
+            else ProgramConfig(
+                CellMode.SLC,
+                randomized=False,
+                tesp_ratio=1.0,
+                levels=levels,
+            )
         )
         self.program_configs[name] = cfg
         if esp:
@@ -154,11 +212,14 @@ class FlashArray:
             self._non_esp.add(name)
         physical = ~words if inverted else words
         self.store[name] = physical
-        self.pec[p.block] = self.pec.get(p.block, 0) + 1
-        if esp:
-            self.esp_programs += 1
+        if charge:
+            self.pec[p.block] = self.pec.get(p.block, 0) + 1
+            if esp:
+                self.esp_programs += 1
 
-    def fc_append(self, name: str, words, *, start: int) -> None:
+    def fc_append(
+        self, name: str, words, *, start: int, charge: bool = True
+    ) -> None:
         """Delta-page ESP program: extend an already-placed page's tail.
 
         Only ``words`` (logical, at word offset ``start``) are programmed —
@@ -167,13 +228,15 @@ class FlashArray:
         cost O(B) instead of O(N).  The page keeps its placement, inversion,
         and program config; the store treats the write as a tail extension
         (compiled plans stay valid, see ``PackedStore.append_words``).
+        ``charge=False`` as in :meth:`fc_write` (MLC physical-page groups).
         """
         p = self.layout[name]
         w = np.asarray(words, dtype=np.uint32)
         physical = ~w if p.inverted else w
         self.store.append_words(name, physical, start)
-        self.pec[p.block] = self.pec.get(p.block, 0) + 1
-        self.esp_programs += 1
+        if charge:
+            self.pec[p.block] = self.pec.get(p.block, 0) + 1
+            self.esp_programs += 1
 
     def fc_read(self, e: Expr) -> jax.Array:
         """Plan + execute a bulk bitwise expression; returns logical words."""
@@ -204,7 +267,10 @@ class FlashArray:
         self.store.region_epochs = {
             r: e + 1 for r, e in old.region_epochs.items()
         }
-        self.layout = Layout(wls_per_block=self.layout.wls_per_block)
+        self.layout = Layout(
+            wls_per_block=self.layout.wls_per_block,
+            levels=self.layout.levels,
+        )
         self.program_configs.clear()
         self._non_esp.clear()
         return len(blocks)
@@ -267,6 +333,10 @@ class FlashArray:
         scratch: dict[str, jax.Array] | None = None,
     ) -> jax.Array:
         cube = self._gather_cube(cmd, seed, scratch)
+        if isinstance(cmd, ThresholdCommand):
+            return threshold_block_reduce(
+                cube, cmd.k, cmd.iscm.inverse_read, interpret=self.interpret
+            )
         return fused_block_reduce(
             cube, cmd.iscm.inverse_read, interpret=self.interpret
         )
@@ -313,6 +383,9 @@ def eval_expr(e: Expr, logical: dict[str, jax.Array]) -> jax.Array:
     """Direct (oracle) evaluation of an expression on logical page data."""
     if isinstance(e, Page):
         return logical[e.name]
+    if isinstance(e, Threshold):
+        vals = jnp.stack([eval_expr(c, logical) for c in e.children])
+        return bitslice_threshold(vals, e.k, vals.shape[0])[0]
     assert isinstance(e, Node)
     vals = jnp.stack([eval_expr(c, logical) for c in e.children])
     from repro.core.bitops import reduce_words

@@ -43,7 +43,26 @@ class Node:
     __invert__ = Page.__invert__
 
 
-Expr = Union[Page, Node]
+@dataclass(frozen=True)
+class Threshold:
+    """k-of-N threshold node: bit j is set iff >= k children are set at j.
+
+    ``k == 1`` is OR and ``k == len(children)`` is AND — callers should
+    build those as plain Nodes (the query layer canonicalizes degenerate
+    thresholds away); this node exists for the strict-majority interior,
+    which the planner lowers to one ThresholdCommand sensing.
+    """
+
+    k: int
+    children: tuple["Expr", ...]
+
+    __and__ = Page.__and__
+    __or__ = Page.__or__
+    __xor__ = Page.__xor__
+    __invert__ = Page.__invert__
+
+
+Expr = Union[Page, Node, Threshold]
 
 
 def _flatten(op: BitOp, items) -> tuple[Expr, ...]:

@@ -18,7 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.commands import WLS_PER_BLOCK
-from repro.core.expr import Expr, Node, Page
+from repro.core.expr import Expr, Node, Page, Threshold
 from repro.core.bitops import BitOp
 
 
@@ -27,11 +27,21 @@ class PagePlacement:
     block: int
     wordline: int
     inverted: bool = False  # stored as complement (for De Morgan OR)
+    level: int = 0  # voltage level within the physical page (MLC/TLC)
 
 
 @dataclass
 class Layout:
     wls_per_block: int = WLS_PER_BLOCK
+    # Multi-level packing: ``levels`` consecutive logical wordlines of a
+    # block co-reside in ONE physical page at distinct voltage levels
+    # (1 = SLC baseline, 2/3 = MLC/TLC-style packing).  Logical wordline
+    # addressing — and hence every MWS/planner coordinate — is untouched:
+    # packing changes the physical footprint, program grouping, timing,
+    # and reliability accounting only (the device senses all levels of a
+    # physical page in one staircase read, so a logical wordline is
+    # always individually addressable).  Immutable after construction.
+    levels: int = 1
     placements: dict[str, PagePlacement] = field(default_factory=dict)
     _block_fill: dict[int, int] = field(default_factory=dict)
     _next_block: int = 0
@@ -48,6 +58,12 @@ class Layout:
     # Forks copy region state, keeping shard layouts appending in lockstep.
     _regions: dict[str, int] = field(default_factory=dict)
 
+    def __post_init__(self):
+        if not 1 <= self.levels <= 3:
+            raise ValueError(
+                f"levels must be 1 (SLC) .. 3 (TLC), got {self.levels}"
+            )
+
     # -- explicit placement ------------------------------------------------
     def place(
         self, name: str, block: int, wordline: int, inverted: bool = False
@@ -61,7 +77,9 @@ class Layout:
                 f"block {block} wl {wordline} already holds "
                 f"{self._by_location[(block, wordline)]!r}"
             )
-        p = PagePlacement(block, wordline, inverted)
+        # logical wordline w lives at level (w % levels) of physical page
+        # (w // levels) — consecutive co-located pages share one cell
+        p = PagePlacement(block, wordline, inverted, wordline % self.levels)
         self.placements[name] = p
         self._by_location[(block, wordline)] = name
         self._block_fill[block] = max(
@@ -76,6 +94,19 @@ class Layout:
             return self._by_location[(block, wordline)]
         except KeyError:
             raise KeyError(f"no page at block {block} wl {wordline}") from None
+
+    def physical_wordlines(self) -> int:
+        """Physical pages the layout occupies (the index-footprint metric).
+
+        Each block's fill packs ``levels`` logical wordlines per physical
+        page, so the footprint is sum(ceil(fill / levels)) — at TLC
+        packing a 48-page column costs 16 physical pages.
+        """
+        return sum(
+            -(-fill // self.levels)
+            for fill in self._block_fill.values()
+            if fill
+        )
 
     # -- snapshot / rollback (planner trial compiles) ----------------------
     def snapshot(self) -> tuple:
@@ -101,7 +132,7 @@ class Layout:
         gather shapes (and hence vmap signatures) across the fleet, while
         later spill allocations stay local to each shard.
         """
-        other = Layout(wls_per_block=self.wls_per_block)
+        other = Layout(wls_per_block=self.wls_per_block, levels=self.levels)
         other.restore(self.snapshot())
         return other
 
@@ -192,6 +223,19 @@ def auto_layout(expr: Expr, layout: Layout | None = None) -> Layout:
                 else:
                     layout.place_colocated([e.name], inverted=False)
             return
+        if isinstance(e, Threshold):
+            # a threshold sense counts CONDUCTING blocks, and an inverted
+            # page conducts when the logical bit is clear — children are
+            # placed plain and spread like an inter-block OR's operands
+            # (k == 1 IS the OR), one child group per block slot
+            leaf_children = [c for c in e.children if isinstance(c, Page)]
+            new = [c.name for c in leaf_children if c.name not in layout]
+            for name in new:
+                layout.place_colocated([name], inverted=False)
+            for c in e.children:
+                if not isinstance(c, Page):
+                    walk(c, BitOp.AND)
+            return
         assert isinstance(e, Node)
         leaf_children = [c for c in e.children if isinstance(c, Page)]
         new = [c.name for c in leaf_children if c.name not in layout]
@@ -200,8 +244,11 @@ def auto_layout(expr: Expr, layout: Layout | None = None) -> Layout:
         else:
             layout.place_colocated(new, inverted=False)
         for c in e.children:
-            if isinstance(c, Node):
+            if not isinstance(c, Page):
                 walk(c, e.op)
 
-    walk(expr, expr.op if isinstance(expr, Node) else BitOp.AND)
+    if isinstance(expr, Threshold):
+        walk(expr, BitOp.AND)
+    else:
+        walk(expr, expr.op if isinstance(expr, Node) else BitOp.AND)
     return layout

@@ -36,10 +36,11 @@ from repro.core.commands import (
     CommandPlan,
     MWSCommand,
     SpillCommand,
+    ThresholdCommand,
     TransferCommand,
     XORCommand,
 )
-from repro.core.expr import Expr, Node, Page
+from repro.core.expr import Expr, Node, Page, Threshold
 from repro.core.placement import Layout
 
 
@@ -63,6 +64,9 @@ def _as_unit(e: Expr, layout: Layout) -> Unit | None:
     if isinstance(e, Page):
         p = layout[e.name]
         return Unit((BlockPBM(p.block, 1 << p.wordline),), p.inverted)
+
+    if isinstance(e, Threshold):
+        return None  # always its own ThresholdCommand, never a plain MWS
 
     assert isinstance(e, Node)
     kids = e.children
@@ -181,9 +185,81 @@ class Planner:
             units.append(u)
         return units
 
+    def _plain_single_unit(
+        self, child: Expr, plan: CommandPlan, force: bool = False
+    ) -> Unit:
+        """A PLAIN single-block unit for ``child``, spilling if needed.
+
+        Threshold sensing counts conducting blocks, so every operand must
+        occupy its own block and conduct exactly when its value is 1 —
+        inverted storage, multi-block units, and (with ``force``) block
+        collisions are resolved by ESP-spilling to a fresh scratch block.
+        """
+        if not force:
+            u = _as_unit(child, self.layout)
+            if u is not None and not u.inverse and len(u.targets) == 1:
+                return u
+        leaf = self._spill(child, plan)
+        u = _as_unit(leaf, self.layout)
+        if u.inverse:  # NAND/NOR/XNOR-rooted spill: re-sense + re-spill plain
+            leaf = self._spill(Node(BitOp.AND, (leaf,)), plan)
+            u = _as_unit(leaf, self.layout)
+        assert u is not None and not u.inverse and len(u.targets) == 1
+        return u
+
+    def _threshold_parts(
+        self, e: Threshold, plan: CommandPlan
+    ) -> tuple[tuple[BlockPBM, ...], int, bool]:
+        """Resolve a Threshold's children to ThresholdCommand parameters.
+
+        Fast path: when EVERY child is an inverted single-block unit in a
+        distinct block, fold the polarity into the threshold instead of
+        spilling — a block then conducts iff its child is 0, and
+
+            #set >= k  <=>  N - #conducting >= k
+                       <=>  NOT (#conducting >= N - k + 1)
+
+        so the command uses k' = N-k+1 with inverse read (complement after
+        the comparison).  Otherwise children are normalized to plain units
+        in distinct blocks via :meth:`_plain_single_unit`.
+        """
+        units = [_as_unit(c, self.layout) for c in e.children]
+        if all(
+            u is not None and u.inverse and len(u.targets) == 1
+            for u in units
+        ):
+            blocks = [u.targets[0].block for u in units]
+            if len(set(blocks)) == len(blocks):
+                return (
+                    tuple(u.targets[0] for u in units),
+                    len(units) - e.k + 1,
+                    True,
+                )
+        out: list[Unit] = []
+        seen: set[int] = set()
+        for child, u in zip(e.children, units):
+            force = u is None or u.inverse or len(u.targets) != 1
+            u = self._plain_single_unit(child, plan, force=force)
+            if u.targets[0].block in seen:
+                u = self._plain_single_unit(child, plan, force=True)
+            seen.add(u.targets[0].block)
+            out.append(u)
+        return tuple(u.targets[0] for u in out), e.k, False
+
+    def _compile_threshold(self, e: Threshold, plan: CommandPlan) -> None:
+        targets, k, inverse = self._threshold_parts(e, plan)
+        plan.commands.append(
+            ThresholdCommand(ISCM(inverse_read=inverse), targets, k=k)
+        )
+        plan.result_source = "S"
+        plan.result_invert = False
+
     def _compile_into(self, e: Expr, plan: CommandPlan, top: bool) -> None:
         if isinstance(e, Page):
             e = Node(BitOp.AND, (e,))
+        if isinstance(e, Threshold):
+            self._compile_threshold(e, plan)
+            return
         u = _as_unit(e, self.layout)
         if u is not None:
             plan.commands.append(
@@ -203,6 +279,19 @@ class Planner:
 
     def _compile_and_chain(self, e: Node, plan: CommandPlan) -> None:
         kids = list(e.children)
+        # A threshold sense resolves in the S-latch exactly like a plain
+        # MWS, so ONE Threshold child may head the S-chain directly (no
+        # scratch round-trip); further thresholds spill like any other
+        # non-unit subexpression.
+        thr_kids = [k for k in kids if isinstance(k, Threshold)]
+        kids = [k for k in kids if not isinstance(k, Threshold)]
+        head_cmd: ThresholdCommand | None = None
+        if thr_kids:
+            kids.extend(self._spill(t, plan) for t in thr_kids[1:])
+            targets, tk, tinv = self._threshold_parts(thr_kids[0], plan)
+            head_cmd = ThresholdCommand(
+                ISCM(inverse_read=tinv, init_c_latch=False), targets, k=tk
+            )
         # AND of plain same-... pages spread across blocks: group by block.
         grouped: list[Expr] = []
         by_block: dict[int, list[Page]] = {}
@@ -238,10 +327,17 @@ class Planner:
             inv_cmds.append(_merge_pbms(bucket))
         # §6.2 ordering: the (single) inverse-read command must head the
         # S-chain; further inverse chunks are spilled and re-sensed plain.
-        ordered = (
-            [Unit(inv_cmds[0], True)] if inv_cmds else []
-        ) + plain_units
-        for extra in inv_cmds[1:]:
+        # When a ThresholdCommand heads the chain instead, EVERY inverse
+        # chunk spills (the head slot is taken).
+        if head_cmd is not None:
+            ordered = list(plain_units)
+            spill_chunks = inv_cmds
+        else:
+            ordered = (
+                [Unit(inv_cmds[0], True)] if inv_cmds else []
+            ) + plain_units
+            spill_chunks = inv_cmds[1:]
+        for extra in spill_chunks:
             # init_c_latch must stay False: when this AND chain is inlined
             # into an OR chain, a C-init here would wipe the partial OR.
             plan.commands.append(
@@ -253,12 +349,14 @@ class Planner:
             self.layout.place(name, block, wl)
             plan.commands.append(SpillCommand(block, wl, name, source="S"))
             ordered.append(_as_unit(Page(name), self.layout))
+        if head_cmd is not None:
+            plan.commands.append(head_cmd)
         for i, u in enumerate(ordered):
             plan.commands.append(
                 MWSCommand(
                     ISCM(
                         inverse_read=u.inverse,
-                        init_s_latch=(i == 0),
+                        init_s_latch=(i == 0 and head_cmd is None),
                         init_c_latch=False,  # C-latch untouched by AND chains
                     ),
                     u.targets,
@@ -276,7 +374,15 @@ class Planner:
         # the unit/spill path like everything else.
         unit_kids: list[Expr] = []
         inline_chains: list[tuple[Node, CommandPlan]] = []
+        thr_parts: list[tuple[tuple[BlockPBM, ...], int, bool]] = []
         for k in e.children:
+            if isinstance(k, Threshold):
+                # a threshold sense lands in S like a plain MWS; OR it into
+                # the C-latch directly (every OR command re-inits S, so any
+                # number of thresholds is fine).  Child spills emitted here
+                # run before the C accumulation starts.
+                thr_parts.append(self._threshold_parts(k, plan))
+                continue
             if (
                 isinstance(k, Node)
                 and k.op is BitOp.AND
@@ -332,23 +438,38 @@ class Planner:
                 )
             )
             first_c = False
+        for targets, tk, tinv in thr_parts:
+            plan.commands.append(
+                ThresholdCommand(
+                    ISCM(
+                        inverse_read=tinv,
+                        init_s_latch=True,
+                        init_c_latch=first_c,
+                        move_s_to_c=True,
+                    ),
+                    targets,
+                    k=tk,
+                )
+            )
+            first_c = False
         for _chain, sub in inline_chains:
             assert not sub.result_invert  # op is AND (not NAND) by filter
             cmds = [c for c in sub.commands if isinstance(c, MWSCommand)]
             last = cmds[-1]
             for c in sub.commands:
                 if c is last:
-                    plan.commands.append(
-                        MWSCommand(
-                            ISCM(
-                                inverse_read=last.iscm.inverse_read,
-                                init_s_latch=last.iscm.init_s_latch,
-                                init_c_latch=first_c,
-                                move_s_to_c=True,
-                            ),
-                            last.targets,
-                        )
+                    iscm = ISCM(
+                        inverse_read=last.iscm.inverse_read,
+                        init_s_latch=last.iscm.init_s_latch,
+                        init_c_latch=first_c,
+                        move_s_to_c=True,
                     )
+                    if isinstance(last, ThresholdCommand):
+                        plan.commands.append(
+                            ThresholdCommand(iscm, last.targets, k=last.k)
+                        )
+                    else:
+                        plan.commands.append(MWSCommand(iscm, last.targets))
                 else:
                     plan.commands.append(c)
             first_c = False

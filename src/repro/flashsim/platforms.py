@@ -23,8 +23,20 @@ import enum
 from dataclasses import dataclass, field
 
 from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
-from repro.flashsim.timing import mws_energy_j, mws_latency_us
-from repro.flashsim.workloads import BulkBitwiseWorkload
+from repro.flashsim.timing import (
+    mws_energy_j,
+    mws_latency_us,
+    threshold_latency_us,
+)
+from repro.flashsim.workloads import BulkBitwiseWorkload, MWSCommandShape
+
+
+def _shape_latency_us(ssd: SSDConfig, s: MWSCommandShape) -> float:
+    """One command's sensing latency: threshold shapes pay the staircase
+    reference sweep on top of the MWS wordline-select setup."""
+    if getattr(s, "threshold_k", 0):
+        return threshold_latency_us(ssd.t_r_us, s.n_blocks, s.max_wls_per_block)
+    return mws_latency_us(ssd.t_r_us, s.n_blocks, s.max_wls_per_block)
 
 
 class Platform(enum.Enum):
@@ -154,8 +166,7 @@ def run_workload(
     assert platform is Platform.FC
     cmd_pairs = wl.fc_command_pairs
     t_cmd_us = sum(
-        mws_latency_us(ssd.t_r_us, s.n_blocks, s.max_wls_per_block) * cnt
-        for s, cnt in cmd_pairs
+        _shape_latency_us(ssd, s) * cnt for s, cnt in cmd_pairs
     )
     t_sense = t_cmd_us * 1e-6 * positions * Q
     t_res_int = result_bytes / ssd.internal_bw
@@ -164,8 +175,14 @@ def run_workload(
     t_host = result_bytes / ssd.host_compute_bw if wl.host_postprocess else 0.0
     e_mws = (
         sum(
+            # threshold sensings hold the read circuitry active for their
+            # longer staircase sweep: energy scales with the same latency
             mws_energy_j(
                 ssd.t_r_us, ssd.p_read_w, s.n_blocks, s.max_wls_per_block
+            )
+            * (
+                _shape_latency_us(ssd, s)
+                / mws_latency_us(ssd.t_r_us, s.n_blocks, s.max_wls_per_block)
             )
             * cnt
             for s, cnt in cmd_pairs

@@ -76,3 +76,52 @@ def mws_energy_j(
     """Energy of one MWS command on one plane."""
     t = mws_latency_us(t_r_us, n_blocks, max_wls_per_block) * 1e-6
     return t * p_read_w * mws_power_ratio(n_blocks, max_wls_per_block)
+
+
+# ---------------------------------------------------------------------------
+# Threshold sensing (MCFlash dynamic sensing thresholds)
+# ---------------------------------------------------------------------------
+#
+# A k-of-N sense replaces the wired-OR cross-block combine with a
+# programmable current comparison: the sense amplifier must settle a
+# reference ladder and resolve the summed block current, so one threshold
+# sense costs several plain-read times of setup plus a small per-block
+# current-resolution term.  Still FAR cheaper than the C(N, k) And/Or
+# chain it replaces once N grows — the cost model prices both and keeps
+# the cheaper form.
+THRESH_SETUP_RATIO = 6.0  # reference-ladder settle, in units of tR
+THRESH_PER_BLOCK_RATIO = 0.15  # per-block current resolution, units of tR
+
+
+def threshold_latency_us(
+    t_r_us: float, n_blocks: int, max_wls_per_block: int
+) -> float:
+    """Latency of one k-of-N threshold sensing command."""
+    return mws_latency_us(t_r_us, n_blocks, max_wls_per_block) + t_r_us * (
+        THRESH_SETUP_RATIO - 1.0 + THRESH_PER_BLOCK_RATIO * n_blocks
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-level (MLC/TLC) packing factors
+# ---------------------------------------------------------------------------
+
+
+def level_read_factor(levels: int) -> float:
+    """Sense-time scale for an L-level page, per logical page sensed.
+
+    Resolving L bits per cell needs a (2^L - 1)-step reference staircase
+    that yields L logical pages: (2^L - 1) / L reads' worth of staircase
+    per page — 1.0 (SLC), 1.5 (MLC), ~2.33 (TLC).
+    """
+    return (2.0**levels - 1.0) / levels
+
+
+def level_program_factor(levels: int) -> float:
+    """Program-time scale for an L-level page, per physical program.
+
+    ISPP needs finer verify steps as the per-level margin shrinks; the
+    paper's Table 1 tPROG SLC:MLC:TLC = 200:500:700 is roughly linear in
+    the level count — modelled as (1 + L) / 2: 1.0, 1.5, 2.0.
+    """
+    return (1.0 + levels) / 2.0

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.core.commands import MWSCommand
+from repro.core.commands import MWSCommand, ThresholdCommand
 from repro.core.expr import Page, and_, or_
 from repro.core.placement import Layout
 from repro.core.planner import Planner
@@ -18,10 +18,18 @@ from repro.core.planner import Planner
 
 @dataclass(frozen=True)
 class MWSCommandShape:
-    """What the timing model needs to know about one MWS command."""
+    """What the timing model needs to know about one MWS command.
+
+    ``threshold_k > 0`` marks a k-of-N threshold sensing (§ESP-style
+    one-shot vote across blocks): same wordline-select setup as MWS, but
+    the timing model prices the staircase sense-amp reference sweep via
+    :func:`repro.flashsim.timing.threshold_latency_us` instead of the
+    plain inter-block read.  ``0`` (the default) is an ordinary MWS read.
+    """
 
     n_blocks: int
     max_wls_per_block: int
+    threshold_k: int = 0
 
 
 @dataclass(frozen=True)
@@ -58,6 +66,9 @@ def _shapes_from_plan(plan) -> tuple[MWSCommandShape, ...]:
                     max_wls_per_block=max(
                         len(t.wordlines) for t in c.targets
                     ),
+                    threshold_k=getattr(c, "k", 0)
+                    if isinstance(c, ThresholdCommand)
+                    else 0,
                 )
             )
     return tuple(shapes)

@@ -1,0 +1,4 @@
+from repro.kernels.threshold.ops import threshold_reduce
+from repro.kernels.threshold.threshold import bitslice_threshold
+
+__all__ = ["threshold_reduce", "bitslice_threshold"]

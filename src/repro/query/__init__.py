@@ -48,11 +48,13 @@ from repro.query.aggregate import (
 from repro.query.ast import (
     Agg,
     And,
+    AtLeast,
     Avg,
     Count,
     Eq,
     GroupBy,
     In,
+    Majority,
     Mask,
     Max,
     Min,
@@ -94,6 +96,8 @@ __all__ = [
     "Agg",
     "Aggregator",
     "And",
+    "AtLeast",
+    "Majority",
     "Avg",
     "Count",
     "Eq",

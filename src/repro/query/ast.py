@@ -95,7 +95,53 @@ class Not(_PredOps):
     child: "Pred"
 
 
-Pred = Eq | In | Range | And | Or | Not
+@dataclass(frozen=True)
+class AtLeast(_PredOps):
+    """Fuzzy predicate: rows matching at least ``k`` of the ``children``.
+
+    ``k == len(children)`` is And and ``k == 1`` is Or — canonicalization
+    rewrites those onto the existing nodes so they share plan-cache and
+    CSE entries with equivalent And/Or queries.  The strict interior
+    lowers to ONE threshold sensing when every child is a single
+    co-located wordline group, and to an Or-of-And-combinations chain
+    otherwise (the cost model picks whichever is cheaper).
+
+    Unlike And/Or, children do NOT dedupe: a duplicated child
+    legitimately counts twice toward ``k``.
+    """
+
+    k: int
+    children: tuple["Pred", ...]
+
+    def __init__(self, k: int, children) -> None:
+        # validation lives here, not __post_init__: defining __init__ on a
+        # dataclass means the generated one (and its __post_init__ hook)
+        # never runs
+        from repro.core.commands import THRESHOLD_MAX_BLOCKS
+
+        k = int(k)
+        children = tuple(children)
+        n = len(children)
+        if not 1 <= k <= n:
+            raise ValueError(
+                f"AtLeast(k={k}) needs 1 <= k <= {n} children"
+            )
+        if n > THRESHOLD_MAX_BLOCKS:
+            raise ValueError(
+                f"AtLeast supports at most {THRESHOLD_MAX_BLOCKS} children "
+                "(dynamic-sensing power envelope)"
+            )
+        object.__setattr__(self, "k", k)
+        object.__setattr__(self, "children", children)
+
+
+def Majority(children) -> AtLeast:
+    """Strict-majority sugar: ``AtLeast(len(children)//2 + 1, children)``."""
+    children = tuple(children)
+    return AtLeast(len(children) // 2 + 1, children)
+
+
+Pred = Eq | In | Range | And | Or | Not | AtLeast
 
 
 def _flatten(cls, items) -> tuple["Pred", ...]:
@@ -129,6 +175,10 @@ def pred_key(pred: Pred) -> tuple:
         )
     if isinstance(pred, Not):
         return ("not", pred_key(pred.child))
+    if isinstance(pred, AtLeast):
+        return ("atleast", pred.k) + tuple(
+            pred_key(c) for c in pred.children
+        )
     if isinstance(pred, (And, Or)):
         tag = "and" if isinstance(pred, And) else "or"
         return (tag,) + tuple(pred_key(c) for c in pred.children)
@@ -144,7 +194,7 @@ def pred_size(pred: Pred) -> int:
     """
     if isinstance(pred, Not):
         return 1 + pred_size(pred.child)
-    if isinstance(pred, (And, Or)):
+    if isinstance(pred, (And, Or, AtLeast)):
         return 1 + sum(pred_size(c) for c in pred.children)
     if isinstance(pred, Range):
         return 3
@@ -158,7 +208,7 @@ def iter_subtrees(pred: Pred):
     yield pred
     if isinstance(pred, Not):
         yield from iter_subtrees(pred.child)
-    elif isinstance(pred, (And, Or)):
+    elif isinstance(pred, (And, Or, AtLeast)):
         for c in pred.children:
             yield from iter_subtrees(c)
 
@@ -196,6 +246,20 @@ def canonicalize(pred: Pred) -> Pred:
         if isinstance(c, Not):
             return c.child
         return Not(c)
+    if isinstance(pred, AtLeast):
+        # degenerate thresholds ARE the existing nodes — rewriting here
+        # means they share plan-cache entries and CSE with equivalent
+        # And/Or queries (satellite of the threshold-sensing work)
+        if pred.k == len(pred.children):
+            return canonicalize(And(pred.children))
+        if pred.k == 1:
+            return canonicalize(Or(pred.children))
+        # children sort for commutativity but NEVER dedupe: unlike
+        # And/Or, a duplicated child counts twice toward k
+        kids = sorted(
+            (canonicalize(c) for c in pred.children), key=pred_key
+        )
+        return AtLeast(pred.k, kids)
     if not isinstance(pred, (And, Or)):
         raise TypeError(f"not a FlashQL predicate: {pred!r}")
     cls = type(pred)
@@ -241,7 +305,7 @@ def columns_of(pred: Pred):
         yield pred.column
     elif isinstance(pred, Not):
         yield from columns_of(pred.child)
-    elif isinstance(pred, (And, Or)):
+    elif isinstance(pred, (And, Or, AtLeast)):
         for c in pred.children:
             yield from columns_of(c)
     else:

@@ -466,7 +466,9 @@ class BitmapStore:
             self.epoch += 1
         return AppendDelta(rows=b, start_row=n0, pages=tuple(deltas))
 
-    def program_delta(self, array, delta: AppendDelta, telemetry=None) -> None:
+    def program_delta(
+        self, array, delta: AppendDelta, telemetry=None
+    ) -> tuple[int, int]:
         """ESP-program an append's page deltas into ``array``.
 
         New pages are placed into their column's reserved layout region
@@ -474,21 +476,51 @@ class BitmapStore:
         programmed whole; existing pages get a single delta-page program
         covering only their tail words (``fc_append``).
 
+        Returns ``(programs, words)`` — the PHYSICAL page programs issued
+        and the physical words they covered.  Under multi-level packing
+        (``array.layout.levels > 1``) the logical pages co-resident in one
+        physical page program together in ONE ISPP pass: the group's lead
+        delta charges the wear/ESP counters, the other levels ride along
+        (``charge=False``), and the group's word cost is the union span of
+        its members' programmed words.  At ``levels == 1`` every group is
+        a singleton and the accounting is bit-identical to SLC.
+
         ``telemetry`` (a :class:`repro.query.telemetry.Telemetry`, attached
         by the owning scheduler) records the programming pass as a trace
         span + page-program histogram when enabled.
         """
         timed = telemetry is not None and telemetry.enabled
         t0 = time.perf_counter() if timed else 0.0
+        layout = array.layout
         for pd in delta.pages:
-            if pd.new:
-                if pd.name not in array.layout:
-                    array.layout.place_colocated(
-                        [pd.name], inverted=pd.inverted, region=pd.region
+            if pd.new and pd.name not in layout:
+                layout.place_colocated(
+                    [pd.name], inverted=pd.inverted, region=pd.region
+                )
+        levels = layout.levels
+        groups: dict[tuple[int, int], list[PageDelta]] = {}
+        for pd in delta.pages:
+            p = layout[pd.name]
+            groups.setdefault(
+                (p.block, p.wordline // levels), []
+            ).append(pd)
+        programs = words = 0
+        for group in groups.values():
+            lo = min(pd.start for pd in group)
+            hi = max(pd.start + int(pd.words.shape[0]) for pd in group)
+            charge = True
+            for pd in group:
+                if pd.new:
+                    array.fc_write(
+                        pd.name, pd.words, esp=True, charge=charge
                     )
-                array.fc_write(pd.name, pd.words, esp=True)
-            else:
-                array.fc_append(pd.name, pd.words, start=pd.start)
+                else:
+                    array.fc_append(
+                        pd.name, pd.words, start=pd.start, charge=charge
+                    )
+                charge = False
+            programs += 1
+            words += hi - lo
         if timed:
             t1 = time.perf_counter()
             telemetry.span(
@@ -501,6 +533,7 @@ class BitmapStore:
             )
             telemetry.observe("append_pages_programmed", delta.num_programs)
             telemetry.observe("append_program_s", t1 - t0)
+        return programs, words
 
     # -- deletes / tombstones ------------------------------------------------
     @property
@@ -684,8 +717,31 @@ class BitmapStore:
             if const in self.logical and const not in layout:
                 layout.place_colocated([const], inverted=False)
 
-    def program(self, array, warmup: Iterable[Query] = ()) -> None:
-        """ESP-program every bitmap page into ``array`` (§6.3 placement)."""
+    def program(
+        self, array, warmup: Iterable[Query] = ()
+    ) -> tuple[int, int]:
+        """ESP-program every bitmap page into ``array`` (§6.3 placement).
+
+        Returns ``(programs, words)`` physical-program stats: logical pages
+        packed into the same physical page (``layout.levels > 1``) program
+        in one ISPP pass, with the lead page charging wear/ESP counters and
+        the group costing ``max`` of its members' word counts.  Bit-identical
+        to per-page accounting at ``levels == 1``.
+        """
         self.place_into(array.layout, warmup=warmup)
+        levels = array.layout.levels
+        groups: dict[tuple[int, int], list[tuple[str, np.ndarray]]] = {}
         for name, words in self.logical.items():
-            array.fc_write(name, words, esp=True)
+            p = array.layout[name]
+            groups.setdefault(
+                (p.block, p.wordline // levels), []
+            ).append((name, words))
+        programs = total = 0
+        for group in groups.values():
+            charge = True
+            for name, words in group:
+                array.fc_write(name, words, esp=True, charge=charge)
+                charge = False
+            programs += 1
+            total += max(int(w.shape[0]) for _, w in group)
+        return programs, total

@@ -52,7 +52,16 @@ import numpy as np
 
 from repro.core.commands import CommandPlan
 from repro.core.engine import eval_expr
-from repro.core.expr import Expr, Node, Page, and_, leaves, not_, or_
+from repro.core.expr import (
+    Expr,
+    Node,
+    Page,
+    Threshold,
+    and_,
+    leaves,
+    not_,
+    or_,
+)
 from repro.core.placement import auto_layout
 from repro.core.planner import Planner
 from repro.core.store import page_region
@@ -65,6 +74,7 @@ from repro.query.aggregate import (
 )
 from repro.query.ast import (
     And,
+    AtLeast,
     Eq,
     In,
     Not,
@@ -185,7 +195,43 @@ def _lower(pred: Pred, store: BitmapStore) -> Expr:
         return and_(*(_lower(c, store) for c in pred.children))
     if isinstance(pred, Or):
         return or_(*(_lower(c, store) for c in pred.children))
+    if isinstance(pred, AtLeast):
+        return _fold_atleast(
+            pred.k, [_lower(c, store) for c in pred.children]
+        )
     raise TypeError(f"not a FlashQL predicate: {pred!r}")
+
+
+def _fold_atleast(k: int, lowered: list[Expr]) -> Expr:
+    """Constant-fold a lowered k-of-N and pick its cheapest expression form.
+
+    Children lowered to the constant FALSE page can never count and drop
+    out; TRUE children always count, so they drop AND decrement ``k``.
+    The degenerate survivors reuse the existing node shapes — ``k == n``
+    is the AND and ``k == 1`` the OR — so plan caching and cross-query CSE
+    share entries with queries spelled the boolean way.  Only the strict
+    interior becomes a :class:`repro.core.expr.Threshold`.
+    """
+    kids: list[Expr] = []
+    for e in lowered:
+        if isinstance(e, Page):
+            if e.name == FALSE_PAGE:
+                continue
+            if e.name == TRUE_PAGE:
+                k -= 1
+                continue
+        kids.append(e)
+    if k <= 0:
+        return Page(TRUE_PAGE)
+    if k > len(kids):
+        return Page(FALSE_PAGE)
+    if len(kids) == 1:
+        return kids[0]
+    if k == len(kids):
+        return and_(*kids)
+    if k == 1:
+        return or_(*kids)
+    return Threshold(k, tuple(kids))
 
 
 def lower_shared(
@@ -231,6 +277,11 @@ def _lower_shared(
         return or_(
             *(_lower_shared(c, store, shared, used) for c in pred.children)
         )
+    if isinstance(pred, AtLeast):
+        return _fold_atleast(
+            pred.k,
+            [_lower_shared(c, store, shared, used) for c in pred.children],
+        )
     return _lower(pred, store)
 
 
@@ -238,6 +289,8 @@ def expr_key(e: Expr) -> tuple:
     """Canonical structural key of a core expression."""
     if isinstance(e, Page):
         return ("p", e.name)
+    if isinstance(e, Threshold):
+        return ("thr", e.k) + tuple(expr_key(c) for c in e.children)
     assert isinstance(e, Node)
     return (e.op.value,) + tuple(expr_key(c) for c in e.children)
 

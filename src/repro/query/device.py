@@ -49,10 +49,15 @@ from repro.core.commands import (
     ESPCommand,
     MWSCommand,
     SpillCommand,
+    ThresholdCommand,
     TransferCommand,
     XORCommand,
 )
-from repro.core.engine import FlashArray, fused_block_reduce
+from repro.core.engine import (
+    FlashArray,
+    fused_block_reduce,
+    threshold_block_reduce,
+)
 from repro.core.store import IDENTITY_SLOT, ZERO_SLOT, PackedStore
 
 
@@ -61,6 +66,11 @@ class _Step:
     """Static (trace-time) part of one executable command."""
 
     kind: str  # "mws" | "xor" | "xfer" | "spill"
+    # "mws": threshold k for a ThresholdCommand sensing, 0 for the plain
+    # wired-OR MWS.  Part of the signature AND the family (family erasure
+    # rewrites only ``shape``), so a threshold plan never pads into a
+    # plain group — the combine semantics differ.
+    k: int = 0
     inverse: bool = False
     init_s: bool = True
     init_c: bool = True
@@ -230,8 +240,14 @@ def plan_step_fn(signature: tuple[_Step, ...], interpret: bool):
                     cube = cube.at[bi, wi].set(scratch[o])
                 for bi, wi, k in st.shared:
                     cube = cube.at[bi, wi].set(shared[k])
-                raw = fused_block_reduce(
-                    cube, st.inverse, interpret=interpret
+                raw = (
+                    threshold_block_reduce(
+                        cube, st.k, st.inverse, interpret=interpret
+                    )
+                    if st.k
+                    else fused_block_reduce(
+                        cube, st.inverse, interpret=interpret
+                    )
                 )
                 s = raw if (st.init_s or s is None) else s & raw
                 if st.init_c:
@@ -430,6 +446,7 @@ class FlashDevice(FlashArray):
                 steps.append(
                     _Step(
                         "mws",
+                        k=cmd.k if isinstance(cmd, ThresholdCommand) else 0,
                         inverse=cmd.iscm.inverse_read,
                         init_s=cmd.iscm.init_s_latch,
                         init_c=cmd.iscm.init_c_latch,

@@ -38,16 +38,23 @@ cache is per-device state with epoch-guarded invalidation.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
+from itertools import combinations
 
 import numpy as np
 
 from repro.core.bitops import BitOp
-from repro.core.commands import CommandPlan, MWSCommand, SpillCommand
-from repro.core.expr import Expr, Node, Page, leaves
+from repro.core.commands import (
+    CommandPlan,
+    MWSCommand,
+    SpillCommand,
+    ThresholdCommand,
+)
+from repro.core.expr import Expr, Node, Page, Threshold, and_, leaves, or_
 from repro.core.planner import Planner
 from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
-from repro.flashsim.timing import mws_latency_us
+from repro.flashsim.timing import mws_latency_us, threshold_latency_us
 from repro.query.ast import Eq, Pred, iter_subtrees, pred_key, pred_size
 
 
@@ -63,7 +70,14 @@ def plan_cost_us(plan: CommandPlan, ssd: SSDConfig = DEFAULT_SSD) -> float:
     """
     cost = 0.0
     for cmd in plan.commands:
-        if isinstance(cmd, MWSCommand):
+        if isinstance(cmd, ThresholdCommand):
+            # dynamic-sensing staircase: slower than one wired-OR MWS,
+            # far cheaper than the C(N, k) chain it replaces at large N
+            max_wls = max(len(t.wordlines) for t in cmd.targets)
+            cost += threshold_latency_us(
+                ssd.t_r_us, len(cmd.targets), max_wls
+            )
+        elif isinstance(cmd, MWSCommand):
             max_wls = max(len(t.wordlines) for t in cmd.targets)
             cost += mws_latency_us(ssd.t_r_us, len(cmd.targets), max_wls)
         elif isinstance(cmd, SpillCommand):
@@ -90,6 +104,12 @@ def reorder_expr(e: Expr, layout) -> Expr:
     """
     if isinstance(e, Page):
         return e
+    if isinstance(e, Threshold):
+        # child order is sensing-irrelevant for a threshold (every child
+        # gets its own block slot); recurse only
+        return Threshold(
+            e.k, tuple(reorder_expr(c, layout) for c in e.children)
+        )
     kids = tuple(reorder_expr(c, layout) for c in e.children)
     if e.op in (BitOp.AND, BitOp.OR) and len(kids) >= 3:
         groups: dict[int, list[Expr]] = {}
@@ -108,6 +128,67 @@ def reorder_expr(e: Expr, layout) -> Expr:
     return Node(e.op, kids)
 
 
+_EXPAND_CAP = 20  # largest C(N, k) worth trial-compiling as a chain
+
+
+def _has_threshold(e: Expr) -> bool:
+    if isinstance(e, Page):
+        return False
+    if isinstance(e, Threshold):
+        return True
+    return any(_has_threshold(c) for c in e.children)
+
+
+def _expand_thresholds(e: Expr) -> Expr | None:
+    """Boolean-chain form of a threshold expression (the And/Or dual).
+
+    ``Threshold(k, kids)`` is equivalent to ``OR over all C(N, k)``
+    ``k``-subsets of ``AND(subset)`` — the form a device without dynamic
+    sensing thresholds must execute.  An AND node with one Threshold child
+    distributes its other factors INTO the expanded OR (the planner then
+    inlines each AND-combination into the C-latch chain instead of
+    spilling the big OR), which is exactly how ``pred AND valid-page``
+    roots lower.  Returns None when any expansion exceeds
+    :data:`_EXPAND_CAP` combinations — at that size the chain can never
+    beat one threshold sensing, so the candidate is not worth compiling.
+    """
+    if isinstance(e, Page):
+        return e
+    if isinstance(e, Node) and e.op is BitOp.AND:
+        thr = [c for c in e.children if isinstance(c, Threshold)]
+        if len(thr) == 1:
+            others = [
+                _expand_thresholds(c)
+                for c in e.children
+                if not isinstance(c, Threshold)
+            ]
+            if any(o is None for o in others):
+                return None
+            t = thr[0]
+            tkids = [_expand_thresholds(c) for c in t.children]
+            if any(x is None for x in tkids):
+                return None
+            if math.comb(len(tkids), t.k) > _EXPAND_CAP:
+                return None
+            return or_(
+                *(
+                    and_(*combo, *others)
+                    for combo in combinations(tkids, t.k)
+                )
+            )
+    kids = []
+    for c in e.children:
+        x = _expand_thresholds(c)
+        if x is None:
+            return None
+        kids.append(x)
+    if isinstance(e, Threshold):
+        if math.comb(len(kids), e.k) > _EXPAND_CAP:
+            return None
+        return or_(*(and_(*combo) for combo in combinations(kids, e.k)))
+    return Node(e.op, tuple(kids))
+
+
 def best_plan(
     expr: Expr, layout, ssd: SSDConfig = DEFAULT_SSD
 ) -> tuple[CommandPlan, Expr, float]:
@@ -116,11 +197,21 @@ def best_plan(
     Returns ``(plan, expr_of_plan, cost_us)``.  Trial compiles run under
     layout snapshots, so spill-scratch allocations of losing candidates
     never leak; the layout is left in the winning candidate's state.
+
+    Threshold expressions compile BOTH forms — the native k-of-N sensing
+    and the equivalent And/Or combination chain — and keep whichever the
+    timing model prices lower: for small C(N, k) a couple of ordinary
+    sensings undercut the staircase threshold sense, while for wide fuzzy
+    matches the single threshold sensing wins by an order of magnitude.
     """
     cands = [expr]
     alt = reorder_expr(expr, layout)
     if alt != expr:
         cands.append(alt)
+    if _has_threshold(expr):
+        chain = _expand_thresholds(expr)
+        if chain is not None and chain != expr:
+            cands.append(chain)
     base = layout.snapshot()
     best = None
     for cand in cands:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.query.ast import And, Eq, In, Not, Or, Pred, Range
+from repro.query.ast import And, AtLeast, Eq, In, Not, Or, Pred, Range
 
 
 def np_select(pred: Pred, table: dict, n: int) -> np.ndarray:
@@ -39,4 +39,11 @@ def np_select(pred: Pred, table: dict, n: int) -> np.ndarray:
         for c in pred.children:
             m |= np_select(c, table, n)
         return m
+    if isinstance(pred, AtLeast):
+        # a duplicated child counts twice toward k, matching the sensed
+        # semantics (its wordline group conducts once per block slot)
+        count = np.zeros(n, np.int32)
+        for c in pred.children:
+            count += np_select(c, table, n)
+        return count >= pred.k
     raise TypeError(f"not a FlashQL predicate: {pred!r}")

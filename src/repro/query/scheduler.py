@@ -34,15 +34,16 @@ from __future__ import annotations
 
 import time
 from collections import Counter
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.commands import MWSCommand
+from repro.core.commands import MWSCommand, ThresholdCommand
 from repro.flashsim.geometry import DEFAULT_SSD, SSDConfig
 from repro.flashsim.platforms import Platform, run_workload
+from repro.flashsim.timing import level_program_factor, level_read_factor
 from repro.flashsim.workloads import BulkBitwiseWorkload, MWSCommandShape
 from repro.query.aggregate import (
     get_aggregator,
@@ -117,6 +118,9 @@ def plan_traffic(plan) -> tuple[tuple, int]:
                         max_wls_per_block=max(
                             len(t.wordlines) for t in cmd.targets
                         ),
+                        threshold_k=cmd.k
+                        if isinstance(cmd, ThresholdCommand)
+                        else 0,
                     )
                 ] += 1
                 wls += cmd.num_wordlines
@@ -142,6 +146,12 @@ def plan_sensings(plan) -> int:
     """MWS sensing operations a plan performs (memoized via plan_traffic)."""
     shapes, _ = plan_traffic(plan)
     return sum(cnt for _, cnt in shapes)
+
+
+def plan_thresholds(plan) -> int:
+    """k-of-N threshold sensings in a plan (memoized via plan_traffic)."""
+    shapes, _ = plan_traffic(plan)
+    return sum(cnt for shape, cnt in shapes if shape.threshold_k)
 
 
 def attribute_result(
@@ -187,6 +197,7 @@ def project_traffic(
     host_postprocess: bool,
     esp_programs: int = 0,
     block_erases: int = 0,
+    levels: int = 1,
     ssd: SSDConfig = DEFAULT_SSD,
     name: str = "flashql",
 ) -> dict:
@@ -207,9 +218,19 @@ def project_traffic(
     ``block_erases`` counts whole-block erases (compaction rebuilds): both
     platforms pay ``t_bers_ms`` per block — garbage collection is the same
     erase-before-program dance wherever the data is computed on.
+
+    ``levels`` is the multi-level packing factor (``Layout.levels``): both
+    platforms sense L-level pages through a longer reference staircase
+    (``level_read_factor``) and program them with finer ISPP verify steps
+    (``level_program_factor``).  What makes packing a *win* is that the
+    traffic counts themselves shrink — fewer physical programs/erases for
+    the same logical pages — which the callers already fold in before
+    projecting.
     """
     if not command_shape_counts and not esp_programs and not block_erases:
         raise ValueError("no traffic served yet")
+    if levels > 1:
+        ssd = replace(ssd, t_r_us=ssd.t_r_us * level_read_factor(levels))
     wl = BulkBitwiseWorkload(
         name=name,
         num_operands=wordlines_sensed,
@@ -224,8 +245,9 @@ def project_traffic(
     )
     fc = run_workload(wl, Platform.FC, ssd)
     osp = run_workload(wl, Platform.OSP, ssd)
-    t_esp = esp_programs * ssd.t_esp_us * 1e-6
-    t_prog_osp = esp_programs * ssd.t_prog_slc_us * 1e-6
+    prog_scale = level_program_factor(levels)
+    t_esp = esp_programs * ssd.t_esp_us * prog_scale * 1e-6
+    t_prog_osp = esp_programs * ssd.t_prog_slc_us * prog_scale * 1e-6
     t_erase = block_erases * ssd.t_bers_ms * 1e-3
     fc_time = fc.time_s + t_esp + t_erase
     osp_time = osp.time_s + t_prog_osp + t_erase
@@ -402,6 +424,9 @@ class BatchScheduler:
                     "wordlines_sensed",
                     record_plan_traffic(self.command_shape_counts, plan),
                 )
+                thr = plan_thresholds(plan)
+                if thr:
+                    self.telemetry.count("threshold_senses", thr)
                 self.telemetry.count("materialization_programs")
 
     # -- incremental ingest --------------------------------------------------
@@ -452,27 +477,33 @@ class BatchScheduler:
 
     def _program_append(self, rows: dict) -> int:
         delta = self.store.append(rows)  # validates before mutating
-        self.store.program_delta(
+        programs, words = self.store.program_delta(
             self.device, delta, telemetry=self.telemetry
         )
         self.telemetry.count("rows_appended", delta.rows)
-        self.telemetry.count("esp_delta_programs", delta.num_programs)
-        self._count_programmed_words(delta, logical=True)
-        return delta.num_programs
+        self.telemetry.count("esp_delta_programs", programs)
+        self._count_programmed_words(delta, physical=words, logical=True)
+        return programs
 
-    def _count_programmed_words(self, delta, *, logical: bool) -> None:
+    def _count_programmed_words(
+        self, delta, *, physical: int, logical: bool
+    ) -> None:
         """Write-amplification accounting for one programmed delta.
 
-        ``words_programmed`` counts every word physically ESP-programmed;
-        ``words_written`` counts only the words a client mutation had to
-        change (``logical=True``).  Compaction reprograms surviving data
-        the client never touched, so it adds to the physical side only —
-        the ratio is the index's write amplification
+        ``words_programmed`` counts the words physically ESP-programmed —
+        ``physical`` comes from :meth:`BitmapStore.program_delta`, which
+        under multi-level packing merges co-resident logical pages into one
+        physical program (this is where the MLC density win shows up).
+        ``words_written`` counts the words a client mutation had to change
+        (``logical=True``) — always the per-logical-page sum, independent
+        of the packing factor.  Compaction reprograms surviving data the
+        client never touched, so it adds to the physical side only — the
+        ratio is the index's write amplification
         (``stats()["write_amplification"]``, also in snapshots).
         """
-        words = sum(int(pd.words.shape[0]) for pd in delta.pages)
-        self.telemetry.count("words_programmed", words)
+        self.telemetry.count("words_programmed", physical)
         if logical:
+            words = sum(int(pd.words.shape[0]) for pd in delta.pages)
             self.telemetry.count("words_written", words)
 
     @property
@@ -516,17 +547,17 @@ class BatchScheduler:
             )
         self.apply_appends()
         delta = self.store.delete(row_ids)
-        self.store.program_delta(
+        programs, words = self.store.program_delta(
             self.device, delta, telemetry=self.telemetry
         )
         self.telemetry.count("rows_deleted", len(np.asarray(row_ids)))
-        self.telemetry.count("esp_delta_programs", delta.num_programs)
-        self._count_programmed_words(delta, logical=True)
+        self.telemetry.count("esp_delta_programs", programs)
+        self._count_programmed_words(delta, physical=words, logical=True)
         self.telemetry.gauge(
             "tombstone_density", self.store.tombstone_density
         )
         self._maybe_compact()
-        return delta.num_programs
+        return programs
 
     def update(self, row_ids, rows: dict[str, object]) -> int:
         """Update = delete + append: tombstone ``row_ids``, append ``rows``
@@ -598,13 +629,12 @@ class BatchScheduler:
         schema = {c: ci.values for c, ci in store.columns.items()}
         erased = self.device.erase_rebuild()
         store.rebuild(table, reserve_rows=reserve_rows, schema=schema)
-        store.program(self.device)
+        _, words = store.program(self.device)
         self.device.reset_after_rebuild()
         self._flush_programs.clear()
         self._extras_cache.clear()
         self._cse_cache.clear()
         self._mask_cache = None
-        words = sum(int(w.shape[0]) for w in store.logical.values())
         tele.count("compactions")
         tele.count("block_erases", erased)
         tele.count("words_programmed", words)
@@ -785,10 +815,13 @@ class BatchScheduler:
         if cse is not None:
             # physical traffic after CSE: each UNIQUE member plan runs once
             # (duplicates ride the member gather) plus each shared subplan
-            wls = 0
+            wls = thr = 0
             for p in list(cse.member_plans) + list(cse.shared_plans):
                 wls += record_plan_traffic(self.command_shape_counts, p)
+                thr += plan_thresholds(p)
             tele.count("wordlines_sensed", wls)
+            if thr:
+                tele.count("threshold_senses", thr)
             tele.count("cse_plan_hits", cse.n_dedup_hits)
             tele.count("cse_shared_senses", len(cse.shared_plans))
             tele.count("cse_rewritten_members", cse.n_rewritten)
@@ -802,6 +835,9 @@ class BatchScheduler:
                     "wordlines_sensed",
                     record_plan_traffic(self.command_shape_counts, cq.plan),
                 )
+                thr = plan_thresholds(cq.plan)
+                if thr:
+                    self.telemetry.count("threshold_senses", thr)
             # each extra plane the aggregate sensed (a BSI slice or an
             # equality bitmap) is one single-wordline read in the
             # projected traffic
@@ -877,6 +913,7 @@ class BatchScheduler:
             "sensings_per_query": (
                 sum(self.command_shape_counts.values()) / served
             ),
+            "threshold_senses": self.threshold_senses,
             "cse_plan_hits": self.cse_plan_hits,
             "cse_shared_senses": self.cse_shared_senses,
             "materializations": self.materializations,
@@ -921,6 +958,7 @@ class BatchScheduler:
                 + self.materialization_programs
             ),
             block_erases=int(self.block_erases),
+            levels=self.device.layout.levels,
             ssd=ssd,
             name=f"flashql({int(self.queries_served)}q)",
         )
@@ -941,6 +979,7 @@ registry_counters(
         "esp_delta_programs",
         "append_batches_coalesced",
         "wordlines_sensed",
+        "threshold_senses",
         "rows_deleted",
         "rows_updated",
         "compactions",

@@ -98,6 +98,7 @@ from repro.query.scheduler import (
     attribute_result,
     merge_appends,
     plan_sensings,
+    plan_thresholds,
     plan_traffic,
     project_traffic,
     queue_append,
@@ -112,6 +113,33 @@ from repro.query.telemetry import (
 )
 
 POLICIES = ("roundrobin", "range")
+
+
+def _program_grouped(dev: FlashDevice, logical: dict) -> tuple[int, int]:
+    """ESP-program a shard's logical pages grouped by PHYSICAL page.
+
+    Under multi-level packing (``dev.layout.levels > 1``) the logical
+    pages co-resident in one physical page program in a single ISPP pass:
+    the group lead charges the wear/ESP counters, the other levels ride
+    along (``charge=False``).  Returns ``(programs, words)`` physical
+    stats — identical to per-page accounting at ``levels == 1``.
+    """
+    levels = dev.layout.levels
+    groups: dict[tuple[int, int], list] = {}
+    for name, words in logical.items():
+        p = dev.layout[name]
+        groups.setdefault((p.block, p.wordline // levels), []).append(
+            (name, words)
+        )
+    programs = total = 0
+    for group in groups.values():
+        charge = True
+        for name, words in group:
+            dev.fc_write(name, words, esp=True, charge=charge)
+            charge = False
+        programs += 1
+        total += max(int(w.shape[0]) for _, w in group)
+    return programs, total
 
 
 def stripe_rows(
@@ -487,12 +515,14 @@ class ShardedBitmapStore:
             )
         if not self.active:
             raise ValueError("ingest a table before programming")
-        canonical = Layout()
+        lead = devices[0].layout
+        canonical = Layout(
+            wls_per_block=lead.wls_per_block, levels=lead.levels
+        )
         self.shards[self.active[0]].place_into(canonical, warmup=warmup)
         for s, dev in enumerate(devices):
             dev.layout = canonical.fork()
-            for name, words in self.shards[s].logical.items():
-                dev.fc_write(name, words, esp=True)
+            _program_grouped(dev, self.shards[s].logical)
 
 
 @dataclass
@@ -666,6 +696,9 @@ class ShardedFlashQL:
                         f"shard{s}.wordlines_sensed",
                         record_plan_traffic(self.shard_traffic[s], plan),
                     )
+                    thr = plan_thresholds(plan)
+                    if thr:
+                        self.telemetry.count("threshold_senses", thr)
                     self.telemetry.count("materialization_programs")
                     self.telemetry.count(
                         f"shard{s}.materialization_programs"
@@ -739,18 +772,19 @@ class ShardedFlashQL:
     def _program_append(self, rows: dict[str, np.ndarray]) -> int:
         deltas = self.store.append(rows)  # validates before mutating
         tele = self.telemetry
-        pages = words = 0
+        pages = words = logical = 0
         for s, delta in deltas.items():
-            self.store.shards[s].program_delta(
+            programs, phys = self.store.shards[s].program_delta(
                 self.devices[s], delta, telemetry=tele
             )
-            tele.count(f"shard{s}.esp_programs", delta.num_programs)
-            pages += delta.num_programs
-            words += sum(int(pd.words.shape[0]) for pd in delta.pages)
+            tele.count(f"shard{s}.esp_programs", programs)
+            pages += programs
+            words += phys
+            logical += sum(int(pd.words.shape[0]) for pd in delta.pages)
             tele.count("rows_appended", delta.rows)
         tele.count("esp_delta_programs", pages)
         tele.count("words_programmed", words)
-        tele.count("words_written", words)
+        tele.count("words_written", logical)
         # row counts moved: host-side valid-row masks and their
         # device-resident stacks are stale (the fleet snapshot stack and
         # extras caches invalidate through the stores' content epochs)
@@ -795,18 +829,19 @@ class ShardedFlashQL:
         self.apply_appends()
         deltas = self.store.delete(row_ids)
         tele = self.telemetry
-        pages = words = 0
+        pages = words = logical = 0
         for s, delta in deltas.items():
-            self.store.shards[s].program_delta(
+            programs, phys = self.store.shards[s].program_delta(
                 self.devices[s], delta, telemetry=tele
             )
-            tele.count(f"shard{s}.esp_programs", delta.num_programs)
-            pages += delta.num_programs
-            words += sum(int(pd.words.shape[0]) for pd in delta.pages)
+            tele.count(f"shard{s}.esp_programs", programs)
+            pages += programs
+            words += phys
+            logical += sum(int(pd.words.shape[0]) for pd in delta.pages)
         tele.count("rows_deleted", int(np.asarray(row_ids).size))
         tele.count("esp_delta_programs", pages)
         tele.count("words_programmed", words)
-        tele.count("words_written", words)
+        tele.count("words_written", logical)
         tele.gauge("tombstone_density", self.store.tombstone_density)
         self._masks = None
         self._maskmat_cache.clear()
@@ -938,17 +973,19 @@ class ShardedFlashQL:
                 min_words=fleet_words,
             )
             if canonical is None:
-                canonical = Layout(wls_per_block=dev.layout.wls_per_block)
+                canonical = Layout(
+                    wls_per_block=dev.layout.wls_per_block,
+                    levels=dev.layout.levels,
+                )
                 st.place_into(canonical)
             dev.layout = canonical.fork()
-            for name, page_words in st.logical.items():
-                dev.fc_write(name, page_words, esp=True)
+            programs, phys = _program_grouped(dev, st.logical)
             dev.reset_after_rebuild()
             erased += blocks
-            pages += len(st.logical)
-            words += sum(int(w.shape[0]) for w in st.logical.values())
+            pages += programs
+            words += phys
             tele.count(f"shard{s}.block_erases", blocks)
-            tele.count(f"shard{s}.esp_programs", len(st.logical))
+            tele.count(f"shard{s}.esp_programs", programs)
             sstore.shard_values[s] = {
                 col: tuple(int(v) for v in np.unique(vals))
                 for col, vals in table.items()
@@ -1140,6 +1177,9 @@ class ShardedFlashQL:
                     f"shard{s}.wordlines_sensed",
                     record_plan_traffic(self.shard_traffic[s], cq.plan),
                 )
+                thr = plan_thresholds(cq.plan)
+                if thr:
+                    tele.count("threshold_senses", thr)
             if tele.enabled:
                 attr = self._attr.get(ticket)
                 if attr is None:
@@ -1395,10 +1435,13 @@ class ShardedFlashQL:
             )
             for b in cse.shared_blocks:
                 dev.pec[b] = dev.pec.get(b, 0) + 1
-            wls = 0
+            wls = thr = 0
             for p in list(cse.member_plans) + list(cse.shared_plans):
                 wls += record_plan_traffic(self.shard_traffic[s], p)
+                thr += plan_thresholds(p)
             tele.count(f"shard{s}.wordlines_sensed", wls)
+            if thr:
+                tele.count("threshold_senses", thr)
             tele.count("cse_plan_hits", cse.n_dedup_hits)
             tele.count("cse_shared_senses", len(cse.shared_plans))
             tele.count("cse_rewritten_members", cse.n_rewritten)
@@ -1536,6 +1579,9 @@ class ShardedFlashQL:
                     f"shard{s}.wordlines_sensed",
                     record_plan_traffic(self.shard_traffic[s], plans[i]),
                 )
+                thr = plan_thresholds(plans[i])
+                if thr:
+                    tele.count("threshold_senses", thr)
         t_sc = time.perf_counter()
 
         if items:
@@ -1735,6 +1781,7 @@ class ShardedFlashQL:
             "sensings_per_query": (
                 sum(sum(c.values()) for c in self.shard_traffic) / served
             ),
+            "threshold_senses": self.threshold_senses,
             "cse_plan_hits": self.cse_plan_hits,
             "cse_shared_senses": self.cse_shared_senses,
             "materializations": self.materializations,
@@ -1782,6 +1829,7 @@ class ShardedFlashQL:
                 block_erases=int(
                     self.telemetry.value(f"shard{s}.block_erases")
                 ),
+                levels=self.devices[s].layout.levels,
                 ssd=ssd,
                 name=f"flashql-shard{s}({self.queries_served}q)",
             )
@@ -1838,6 +1886,7 @@ registry_counters(
         "block_erases",
         "words_programmed",  # physical ESP traffic (appends+deletes+GC)
         "words_written",  # logical client mutations — WA denominator
+        "threshold_senses",  # k-of-N one-shot sensings executed
         "compaction_rows_dropped",
         "cse_plan_hits",  # flush members served by another member's plan
         "cse_shared_senses",  # shared subtree plans sensed (pipelined CSE)
@@ -1868,12 +1917,15 @@ def build_sharded_flashql(
     grow_on_overflow: bool = False,
     optimize: bool = True,
     materialize_after: int | None = 32,
+    levels: int = 1,
 ) -> ShardedFlashQL:
     """Ingest ``table``, program ``num_shards`` fresh devices, return the
     serving frontend — the one-call path used by tests and benchmarks.
     ``reserve_rows`` leaves per-stripe word capacity for later
     :meth:`ShardedFlashQL.append` batches; ``pipeline`` enables the
-    asynchronous per-shard fused flush (see :class:`ShardedFlashQL`)."""
+    asynchronous per-shard fused flush (see :class:`ShardedFlashQL`);
+    ``levels`` sets the multi-level packing factor (1 = SLC, 2 = MLC,
+    3 = TLC) every device's layout programs/senses at."""
     store = ShardedBitmapStore(
         num_shards=num_shards,
         policy=policy,
@@ -1882,7 +1934,11 @@ def build_sharded_flashql(
     )
     store.ingest(table)
     devices = [
-        FlashDevice(num_planes=num_planes, interpret=interpret)
+        FlashDevice(
+            num_planes=num_planes,
+            interpret=interpret,
+            layout=Layout(levels=levels),
+        )
         for _ in range(num_shards)
     ]
     store.program(devices, warmup=warmup)

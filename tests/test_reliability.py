@@ -128,3 +128,57 @@ def test_error_injection_rate():
     nbits = 64 * 256 * 32
     assert abs(flipped / nbits - p) < 0.2 * p
     assert (inject_bit_errors(w, 0.0, seed=3) == w).all()
+
+
+# -- multi-level (MLC/TLC) plane packing -------------------------------------
+def test_rber_monotone_in_levels():
+    """Packing more bitmap pages per cell shrinks every level margin:
+    RBER must rise strictly and monotonically with the level count."""
+    for mode in (CellMode.SLC, CellMode.MLC):
+        for rand in (True, False):
+            vals = [
+                rber(ProgramConfig(mode, rand, 1.0, levels=lv))
+                for lv in (1, 2, 3)
+            ]
+            assert vals[0] < vals[1] < vals[2]
+
+
+def test_rber_levels_quadratic_margin_penalty():
+    """The per-level margin shrinks ~1/L and the neighbor count grows ~L:
+    the model charges L^2 — TLC packing is 9x SLC at equal tESP."""
+    base = rber(ProgramConfig(CellMode.SLC, True, 1.0, levels=1))
+    assert rber(
+        ProgramConfig(CellMode.SLC, True, 1.0, levels=3)
+    ) == pytest.approx(9.0 * base)
+
+
+def test_esp_zero_point_scales_with_levels():
+    """ESP restores zero-error reads at every packing level — the margin
+    just costs proportionally more program time: tESP >= 1 + 0.9*L."""
+    worst = block_quality_quantile(0.999)
+    for lv in (1, 2, 3):
+        zero_at = 1.0 + (ESP_ZERO_TESP - 1.0) * lv
+        assert (
+            rber(
+                ProgramConfig(CellMode.SLC, False, zero_at, levels=lv),
+                block_quality=worst,
+            )
+            == 0.0
+        )
+        # just short of the stretched margin is NOT error-free
+        assert (
+            rber(
+                ProgramConfig(CellMode.SLC, False, zero_at - 0.05, levels=lv),
+                block_quality=worst,
+            )
+            > 0.0
+        )
+
+
+def test_esp_one_level_parity_with_slc():
+    """levels=1 is plain SLC: the packed model must reproduce the paper's
+    single-level ESP anchors bit-for-bit (Fig. 11 zero point included)."""
+    for tesp in np.linspace(1.0, 1.9, 7):
+        assert rber(
+            ProgramConfig(CellMode.SLC, False, float(tesp), levels=1)
+        ) == _r(CellMode.SLC, False, float(tesp))
